@@ -1,0 +1,51 @@
+"""Paper Fig 4: ablation of the analytical feature families — full model vs
+w/o MIO features, w/o Math features, and w/o MLP (roofline predictor) on the
+GEMM and Attention datasets."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, get_dataset
+from repro.core.dataset import SEEN, mape
+from repro.core.features import PIPES
+from repro.core.nn import fit_mlp
+
+MATH = [i for i, p in enumerate(PIPES) if p in ("mxu", "vpu", "xu")]
+MIO = [i for i, p in enumerate(PIPES) if p in ("hbm", "vmem")]
+
+
+def _mask_cols(X, pipes_idx):
+    X = X.copy()
+    for i in pipes_idx:
+        X[:, 5 * i : 5 * i + 5] = 0.0
+    n = 5 * len(PIPES)
+    # also zero the pipe-balance ratios of the ablated pipes
+    for i in pipes_idx:
+        X[:, n + 3 + i] = 0.0
+    return X
+
+
+def run(csv: Csv):
+    for kind in ("gemm", "attention"):
+        ds = get_dataset(kind)
+        seen = np.array([h in SEEN for h in ds.hw_names])
+        tr_m = seen  # train split on seen hw
+        variants = {
+            "full": ds.X,
+            "wo_mio": _mask_cols(ds.X, MIO),
+            "wo_math": _mask_cols(ds.X, MATH),
+        }
+        results = {}
+        for name, X in variants.items():
+            m = fit_mlp(X[tr_m], ds.y_eff[tr_m], seed=3, max_epochs=250)
+            pred = ds.theoretical_s / np.clip(m.predict(X), 1e-3, 1.0)
+            results[name] = mape(pred, ds.actual_s)
+        results["wo_mlp"] = mape(ds.theoretical_s, ds.actual_s)
+        for name, v in results.items():
+            csv.add(f"fig4/{kind}/{name}", 0.0, f"{v:.1f}%")
+        for name in ("wo_mio", "wo_math", "wo_mlp"):
+            csv.add(
+                f"fig4/{kind}/gain_vs_{name}",
+                0.0,
+                f"{results[name]/max(results['full'],1e-9):.1f}x",
+            )

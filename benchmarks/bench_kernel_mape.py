@@ -1,0 +1,42 @@
+"""Paper Table VIII + Fig 5: kernel-level prediction MAPE of PipeWeave vs the
+four baselines, split by seen/unseen hardware, per kernel family."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, get_all_datasets, get_baseline, get_pipeweave
+from repro.core.dataset import KERNELS, SEEN, mape
+
+BASELINE_NAMES = ("roofline", "linear", "habitat", "neusight")
+
+
+def run(csv: Csv):
+    datasets = get_all_datasets()
+    pw = get_pipeweave()
+
+    table = {}
+    for kind, ds in datasets.items():
+        seen = np.array([h in SEEN for h in ds.hw_names])
+        preds = {"pipeweave": pw.predict_dataset(ds)}
+        for b in BASELINE_NAMES:
+            preds[b] = get_baseline(b, kind).predict(ds)
+        for name, p in preds.items():
+            table[(kind, name, "seen")] = mape(p[seen], ds.actual_s[seen])
+            table[(kind, name, "unseen")] = mape(p[~seen], ds.actual_s[~seen])
+            csv.add(
+                f"table8/{kind}/{name}",
+                0.0,
+                f"seen={table[(kind, name, 'seen')]:.1f}%|unseen={table[(kind, name, 'unseen')]:.1f}%",
+            )
+
+    for split in ("seen", "unseen"):
+        for name in ("pipeweave", *BASELINE_NAMES):
+            avg = np.mean([table[(k, name, split)] for k in datasets])
+            csv.add(f"table8/avg_{split}/{name}", 0.0, f"{avg:.1f}%")
+    # headline error-reduction factor vs best baseline (paper: 6.7x / 3.8x)
+    for split in ("seen", "unseen"):
+        ours = np.mean([table[(k, "pipeweave", split)] for k in datasets])
+        best_base = min(
+            np.mean([table[(k, b, split)] for k in datasets]) for b in BASELINE_NAMES
+        )
+        csv.add(f"table8/error_reduction_{split}", 0.0, f"{best_base/max(ours,1e-9):.1f}x")

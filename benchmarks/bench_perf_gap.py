@@ -1,0 +1,67 @@
+"""Paper §VII (Figs 8-9, Table X): P80 ceiling, Performance-Gap diagnosis and
+model-guided autotuning of the fused MoE kernel."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, get_dataset
+from repro.core.quantile import perf_gap, train_ceiling
+from repro.core.tuner import geomean_speedup, pearson, tune_underperformers
+
+
+def run(csv: Csv):
+    ds = get_dataset("fused_moe")
+    ceiling = train_ceiling(ds, quantile=0.8)
+    report = perf_gap(ceiling, ds, threshold=0.1)
+
+    grid, cdf = report.cdf()
+    # fraction of points with gap below 0.1 (paper: ~80%)
+    below = float((report.gaps <= 0.1).mean())
+    csv.add("fig8/frac_gap_below_0.1", 0.0, f"{below:.3f}")
+    for hw, count in sorted(report.per_hw_counts.items(), key=lambda kv: -kv[1]):
+        csv.add(f"fig8/underperforming/{hw}", 0.0,
+                f"{count} ({100*report.per_hw_frac[hw]:.1f}%)")
+
+    # --- Table X: tune underperformers, correlate counts with speedups.
+    # Paper protocol: §VII-C tunes on hardware from the TRAINING set only
+    # (A40/L20/A100/H800 are all seen GPUs); on unseen hw part of the
+    # diagnosed "gap" is ceiling-model extrapolation error, not kernel
+    # config badness, which dilutes the correlation — we report both.
+    from repro.core.dataset import SEEN
+
+    tuned = tune_underperformers(ds, report.underperforming, per_hw_limit=30)
+    counts, speedups = [], []
+    counts_seen, speedups_seen = [], []
+    for hw, results in sorted(tuned.items(), key=lambda kv: -len(kv[1])):
+        if not results:
+            continue
+        g = geomean_speedup(results)
+        counts.append(report.per_hw_counts[hw])
+        speedups.append(g)
+        if hw in SEEN:
+            counts_seen.append(report.per_hw_counts[hw])
+            speedups_seen.append(g)
+        csv.add(f"table10/{hw}", 0.0,
+                f"underperf={report.per_hw_counts[hw]}|geomean_speedup={g:.2f}x"
+                f"|{'seen' if hw in SEEN else 'unseen'}")
+    csv.add("table10/pearson_seen_hw_paper_protocol", 0.0,
+            f"{pearson(counts_seen, speedups_seen):.2f}")
+    csv.add("table10/pearson_all_hw", 0.0, f"{pearson(counts, speedups):.2f}")
+    best = max((max((r.speedup for r in rs), default=1.0) for rs in tuned.values()), default=1.0)
+    csv.add("table10/max_speedup", 0.0, f"{best:.2f}x")
+
+    # --- Fig 9: gap before/after tuning on the tuned points ----------------
+    for hw, results in tuned.items():
+        if not results:
+            continue
+        before, after = [], []
+        hw_rows = [i for i, (h, u) in enumerate(zip(ds.hw_names, report.underperforming)) if h == hw and u]
+        yhat = ceiling.predict_ceiling(ds.X[hw_rows]) if hw_rows else np.array([])
+        for j, r in enumerate(results):
+            i = hw_rows[j]
+            eff_before = ds.y_eff[i]
+            eff_after = min(eff_before * r.speedup, 1.0)
+            before.append(float(yhat[j] - eff_before))
+            after.append(float(yhat[j] - eff_after))
+        csv.add(f"fig9/{hw}", 0.0,
+                f"gap_before={np.mean(before):.3f}|gap_after={np.mean(after):.3f}")

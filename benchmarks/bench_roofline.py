@@ -1,0 +1,23 @@
+"""§Roofline deliverable: three-term roofline per (arch x shape x mesh) from
+the REAL compiled dry-run artifacts (results/dryrun)."""
+from __future__ import annotations
+
+from benchmarks.common import Csv
+from repro.roofline.analysis import load_rows, pick_hillclimb_cells
+
+
+def run(csv: Csv):
+    rows = load_rows()
+    if not rows:
+        csv.add("roofline/status", 0.0, "no dryrun artifacts (run repro.launch.dryrun --all)")
+        return
+    for r in rows:
+        csv.add(
+            f"roofline/{r.arch}/{r.shape}/{r.mesh}",
+            0.0,
+            f"compute={r.compute_s:.3e}s|mem={r.memory_s:.3e}s|coll={r.collective_s:.3e}s"
+            f"|dominant={r.dominant}|useful={r.useful_ratio:.2f}|frac={r.roofline_fraction:.2f}",
+        )
+    picks = pick_hillclimb_cells(rows)
+    for why, r in picks.items():
+        csv.add(f"roofline/hillclimb/{why}", 0.0, f"{r.arch}/{r.shape}/{r.mesh}")

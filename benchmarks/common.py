@@ -1,0 +1,79 @@
+"""Shared benchmark infrastructure: dataset/model caching so the suite can
+run module-by-module without retraining, and CSV emission helpers."""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import time
+
+import numpy as np
+
+from repro.core.dataset import KERNELS, build_dataset, mape
+from repro.core.estimator import PipeWeave, train_pipeweave
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "results/bench_cache")
+# dataset sizes tuned for the single-CPU-core container; the paper's full
+# sweep is the same code with n_workloads scaled up
+N_WORKLOADS = int(os.environ.get("REPRO_BENCH_WORKLOADS", "220"))
+MAX_EPOCHS = int(os.environ.get("REPRO_BENCH_EPOCHS", "250"))
+
+
+def _path(name: str) -> str:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    return os.path.join(CACHE_DIR, name)
+
+
+def get_dataset(kind: str):
+    p = _path(f"ds_{kind}_{N_WORKLOADS}.pkl")
+    if os.path.exists(p):
+        with open(p, "rb") as f:
+            return pickle.load(f)
+    ds = build_dataset(kind, n_workloads=N_WORKLOADS, seed=hash(kind) % 2**31)
+    with open(p, "wb") as f:
+        pickle.dump(ds, f)
+    return ds
+
+
+def get_all_datasets():
+    return {k: get_dataset(k) for k in KERNELS}
+
+
+def get_pipeweave() -> PipeWeave:
+    p = _path(f"pipeweave_{N_WORKLOADS}_{MAX_EPOCHS}.pkl")
+    if os.path.exists(p):
+        return PipeWeave.load(p)
+    pw = train_pipeweave(get_all_datasets(), max_epochs=MAX_EPOCHS)
+    pw.save(p)
+    return pw
+
+
+def get_baseline(name: str, kind: str):
+    from repro.core.baselines import BASELINES
+
+    p = _path(f"baseline_{name}_{kind}_{N_WORKLOADS}.pkl")
+    if os.path.exists(p):
+        with open(p, "rb") as f:
+            return pickle.load(f)
+    b = BASELINES[name]().fit(get_dataset(kind))
+    with open(p, "wb") as f:
+        pickle.dump(b, f)
+    return b
+
+
+class Csv:
+    """Collects ``name,us_per_call,derived`` rows (the run.py contract)."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.3f},{derived}")
+
+    def timed(self, name: str, fn, derived_fn):
+        t0 = time.perf_counter()
+        out = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        self.add(name, us, derived_fn(out))
+        return out

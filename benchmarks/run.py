@@ -1,0 +1,49 @@
+"""Benchmark suite orchestrator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Caches datasets/trained models in
+results/bench_cache so repeated runs are fast.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table7_decomposer", "benchmarks.bench_decomposer"),
+    ("table8_kernel_mape", "benchmarks.bench_kernel_mape"),
+    ("fig4_ablation", "benchmarks.bench_ablation"),
+    ("fig7_overhead", "benchmarks.bench_overhead"),
+    ("fig8_table10_perf_gap", "benchmarks.bench_perf_gap"),
+    ("table9_e2e", "benchmarks.bench_e2e"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="comma-separated module tags to run")
+    args = ap.parse_args()
+    from benchmarks.common import Csv
+
+    csv = Csv()
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, modname in MODULES:
+        if args.only and tag not in args.only.split(","):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run(csv)
+            csv.add(f"{tag}/_elapsed_s", 0.0, f"{time.time()-t0:.1f}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            csv.add(f"{tag}/_FAILED", 0.0, "see stderr")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,62 @@
+"""Quickstart: the PipeWeave workflow end to end in one minute.
+
+1. decompose a kernel into tasks, schedule it, inspect pipeline demands;
+2. train a small estimator and predict latency on unseen hardware;
+3. predict an end-to-end serving step for one of the assigned architectures.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import hwsim
+from repro.core.dataset import build_dataset, featurize, mape, SEEN, UNSEEN
+from repro.core.e2e import CommRegressor, oracle_times, request_latency
+from repro.core.estimator import train_pipeweave
+from repro.core.hardware import get_hw
+from repro.configs import get_arch
+
+
+def main():
+    hw_seen = get_hw("tpu-v5e")
+    hw_unseen = get_hw("tpu-v6e")
+
+    # --- 1. analytical decomposition ------------------------------------
+    gemm = {"M": 4096, "N": 8192, "K": 4096}
+    fs = featurize("gemm", gemm, hw_seen)
+    print("== kernel decomposition (gemm 4096x8192x4096 on tpu-v5e) ==")
+    print(f"  tasks={fs.n_tasks}  chips_used={fs.n_chips_used}")
+    for p in ("mxu", "hbm"):
+        print(f"  {p}: total={fs.totals[p]:.3e}  slice-cycles={fs.total_cycles[p]:.3e}")
+    print(f"  theoretical={fs.theoretical_s*1e6:.1f}us  "
+          f"hwsim={hwsim.simulate('gemm', gemm, hw_seen)*1e6:.1f}us")
+
+    # --- 2. train a small estimator -------------------------------------
+    print("\n== training a small per-kernel MLP (gemm) ==")
+    ds = build_dataset("gemm", n_workloads=120, seed=0)
+    pw = train_pipeweave({"gemm": ds})
+    pred = pw.predict_dataset(ds)
+    seen = np.array([h in SEEN for h in ds.hw_names])
+    print(f"  MAPE seen={mape(pred[seen], ds.actual_s[seen]):.1f}%  "
+          f"unseen={mape(pred[~seen], ds.actual_s[~seen]):.1f}%")
+    t = pw.predict_latency("gemm", gemm, hw_unseen)
+    print(f"  predicted on UNSEEN tpu-v6e: {t*1e6:.1f}us "
+          f"(oracle {hwsim.simulate('gemm', gemm, hw_unseen)*1e6:.1f}us)")
+
+    # --- 3. end-to-end request prediction --------------------------------
+    print("\n== E2E: qwen3-0.6b, batch 8, 982-token prompts, 64 new tokens ==")
+    cfg = get_arch("qwen3-0.6b")
+    comm = CommRegressor().fit(hw_seen)
+    kt, ct = oracle_times(hw_seen)
+    actual = request_latency(cfg, 8, 982, 64, tp=1, kernel_time=kt, comm_time=ct)
+    predicted = request_latency(
+        cfg, 8, 982, 64, tp=1,
+        kernel_time=lambda k, X: pw.predict_latency(k, X, hw_seen)
+        if k in pw.models else hwsim.simulate(k, X, hw_seen),
+        comm_time=comm.predict,
+    )
+    print(f"  oracle={actual*1e3:.1f}ms  predicted={predicted*1e3:.1f}ms  "
+          f"err={abs(predicted-actual)/actual*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

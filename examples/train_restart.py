@@ -1,0 +1,58 @@
+"""Fault-tolerance drill: train, simulate a preemption, restart from the
+latest atomic checkpoint and verify the loss trajectory continues exactly
+where it left off.
+
+Run: PYTHONPATH=src python examples/train_restart.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig
+from repro.train.step import TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_restart_")
+    cfg = get_arch("qwen3-0.6b").smoke()
+
+    def make(total):
+        return Trainer(
+            cfg,
+            DataConfig(batch=4, seq_len=32, seed=0),
+            TrainConfig(lr=1e-3, warmup=2, total_steps=total),
+            TrainerConfig(total_steps=total, ckpt_every=5, ckpt_dir=ckpt_dir, log_every=5),
+        )
+
+    print("run A: training 20 steps, preempted after 10 ...")
+    a = make(20)
+    step, _, losses_a = a.run(seed=0, preempt_after=10)
+    print(f"  preempted at step {step}, checkpoint saved")
+
+    print("run B: restarting from the checkpoint ...")
+    b = make(20)
+    step, _, losses_b = b.run(seed=0)
+    print(f"  finished at step {step}")
+
+    print("reference: uninterrupted 20-step run ...")
+    import shutil, tempfile as tf
+
+    c = Trainer(
+        cfg,
+        DataConfig(batch=4, seq_len=32, seed=0),
+        TrainConfig(lr=1e-3, warmup=2, total_steps=20),
+        TrainerConfig(total_steps=20, ckpt_every=50, ckpt_dir=tf.mkdtemp(), log_every=5),
+    )
+    _, _, losses_full = c.run(seed=0)
+
+    resumed = losses_a + losses_b
+    drift = np.max(np.abs(np.array(resumed) - np.array(losses_full)))
+    print(f"max |loss drift| between preempted+resumed and uninterrupted: {drift:.2e}")
+    assert drift < 1e-4
+    print("bitwise-continuation check PASSED")
+
+
+if __name__ == "__main__":
+    main()

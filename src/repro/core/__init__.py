@@ -1,0 +1,5 @@
+"""PipeWeave-TPU: the paper's contribution as a composable library.
+
+decompose -> schedule -> featurize -> estimate, plus the hwsim oracle,
+baselines, E2E workload generator, quantile ceilings and the autotuner.
+"""

@@ -1,0 +1,279 @@
+"""Kernel Decomposer — F(X, S) -> {tasks}   (paper §IV-A).
+
+Deterministically decomposes each kernel family into schedulable *tasks*.
+On TPU a task is a Pallas grid tile (the unit a TensorCore streams through
+with double-buffered DMA); across the slice, tiles are distributed by either
+the static SPMD partition (conventional kernels) or a software work queue
+(persistent/grouped kernels) — see scheduler.py.
+
+Tasks are stored as a struct-of-arrays (:class:`TaskArray`) for speed; each
+task carries its dimension-derived per-pipeline demands (paper Eq. 3-4):
+
+    mxu  = alpha * prod(tile dims)    (alpha=2 GEMM, 4 flash-attention)
+    vpu  = elementwise op count
+    xu   = transcendental count (exp / rsqrt / silu / tanh)
+    hbm  = operand/result bytes streamed from HBM
+    vmem = bytes touched in VMEM (incl. accumulator traffic)
+    align= MXU/VPU tile-alignment utilization in (0, 1]
+    ws   = VMEM working-set bytes of the task
+
+Each family's decomposer is a few dozen lines (paper §V-A reports 10-50).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.hardware import TPUSpec
+
+
+@dataclasses.dataclass
+class TaskArray:
+    mxu: np.ndarray
+    vpu: np.ndarray
+    xu: np.ndarray
+    hbm: np.ndarray
+    vmem: np.ndarray
+    align: np.ndarray
+    ws: np.ndarray
+
+    def __len__(self):
+        return len(self.mxu)
+
+    @staticmethod
+    def build(n, **kw):
+        z = lambda: np.zeros(n, dtype=np.float64)
+        f = {k: np.asarray(v, dtype=np.float64) for k, v in kw.items()}
+        return TaskArray(
+            mxu=f.get("mxu", z()),
+            vpu=f.get("vpu", z()),
+            xu=f.get("xu", z()),
+            hbm=f.get("hbm", z()),
+            vmem=f.get("vmem", z()),
+            align=f.get("align", np.ones(n)),
+            ws=f.get("ws", z()),
+        )
+
+    @staticmethod
+    def concat(parts: list["TaskArray"]) -> "TaskArray":
+        return TaskArray(
+            **{
+                f.name: np.concatenate([getattr(p, f.name) for p in parts])
+                for f in dataclasses.fields(TaskArray)
+            }
+        )
+
+
+def _ceil(a, b):
+    return -(-a // b)
+
+
+def _util(sizes, quantum):
+    sizes = np.asarray(sizes, dtype=np.float64)
+    return sizes / (np.ceil(sizes / quantum) * quantum)
+
+
+def _tile_sizes(total: int, tile: int) -> np.ndarray:
+    n = _ceil(total, tile)
+    sizes = np.full(n, tile, dtype=np.float64)
+    if total % tile:
+        sizes[-1] = total % tile
+    return sizes
+
+
+# ----------------------------------------------------------------------
+# GEMM  (cuBLAS analogue: the XLA/Mosaic tile heuristic is the
+# "closed-source" selector we reverse-engineer — paper §IV-A)
+# ----------------------------------------------------------------------
+
+
+def gemm_tile_heuristic(M, N, K, hw: TPUSpec, dtype_bytes: int = 2):
+    """Biggest MXU-aligned tile whose working set fits VMEM, shrunk when the
+    grid would underfill the slice (wave-quantization avoidance)."""
+    vmem_budget = hw.vmem_mb * 2**20 * 0.6
+    cands = ((512, 512), (512, 256), (256, 256), (256, 128), (128, 128))
+    for tm, tn in cands:
+        tiles = _ceil(M, tm) * _ceil(N, tn)
+        work = (tm + tn) * min(K, 2048) * dtype_bytes + tm * tn * 4
+        if work <= vmem_budget and (tiles >= hw.num_chips or (tm >= M and tn >= N)):
+            return tm, tn
+    return 128, 128
+
+
+def decompose_gemm(X: dict, hw: TPUSpec) -> TaskArray:
+    M, N, K = X["M"], X["N"], X["K"]
+    b = X.get("dtype_bytes", 2)
+    tm, tn = gemm_tile_heuristic(M, N, K, hw, b)
+    ms = _tile_sizes(M, tm)
+    ns = _tile_sizes(N, tn)
+    m = np.repeat(ms, len(ns))
+    n = np.tile(ns, len(ms))
+    t = TaskArray.build(
+        len(m),
+        mxu=2.0 * m * n * K,
+        vpu=m * n,
+        hbm=(m + n) * K * b + m * n * b,
+        vmem=(m + n) * K * b + m * n * (b + 4),
+        align=_util(m, 8) * _util(n, 128) * _util([K], 128)[0],
+        ws=(np.minimum(K, 2048) * (m + n)) * b + m * n * 4,
+    )
+    return t
+
+
+def decompose_scaled_mm(X: dict, hw: TPUSpec) -> TaskArray:
+    """W8A8 GEMM: 1-byte operands + dequant epilogue (MXU int8 rate handled
+    by hwsim via the int8 flag in X)."""
+    t = decompose_gemm({**X, "dtype_bytes": 1}, hw)
+    t.vpu = t.vpu * 3.0  # scale multiply + cast epilogue
+    return t
+
+
+# ----------------------------------------------------------------------
+# FlashAttention (FA2-style): per (batch, kv-head, q-block) task; causal
+# masking makes the effective KV per task variable — the paper's canonical
+# non-uniform workload.
+# ----------------------------------------------------------------------
+
+
+def decompose_attention(X: dict, hw: TPUSpec) -> TaskArray:
+    B, H, G = X["bs"], X["nkv"], X["group"]
+    qlen, kvlen, hd = X["qlen"], X["kvlen"], X["hd"]
+    causal = X.get("causal", 1)
+    b = X.get("dtype_bytes", 2)
+    bq = min(256, qlen) if qlen > 1 else 1
+    nq = _ceil(qlen, bq)
+    m = _tile_sizes(qlen, bq)  # (nq,)
+    starts = np.arange(nq) * bq
+    offset = kvlen - qlen
+    kv_eff = np.full(nq, float(kvlen))
+    if causal:
+        kv_eff = np.minimum(kvlen, offset + starts + m)
+    rows = G * m
+    one = TaskArray.build(
+        nq,
+        mxu=2.0 * rows * kv_eff * hd * 2.0,
+        xu=rows * kv_eff,
+        vpu=4.0 * rows * kv_eff,
+        hbm=(2.0 * rows * hd + 2.0 * kv_eff * hd) * b,
+        vmem=(2.0 * rows * hd + 2.0 * kv_eff * hd) * b + rows * kv_eff * b,
+        align=_util(rows, 8) * _util([hd], 128)[0],
+        ws=(rows * hd * 2 + np.minimum(kv_eff, 512) * hd * 2) * b + rows * hd * 4,
+    )
+    reps = B * H
+    return TaskArray(
+        **{
+            f.name: np.tile(getattr(one, f.name), reps)
+            for f in dataclasses.fields(TaskArray)
+        }
+    )
+
+
+# ----------------------------------------------------------------------
+# RMSNorm / SiLU&Mul: row-block elementwise tasks
+# ----------------------------------------------------------------------
+
+
+def _rowwise(X, b, vpu_per_el, xu_per_el, streams):
+    seq, dim = X["seq"], X["dim"]
+    rows = _tile_sizes(seq, 512)
+    n = len(rows)
+    return TaskArray.build(
+        n,
+        vpu=vpu_per_el * rows * dim,
+        xu=xu_per_el * rows * dim if xu_per_el >= 1 else rows,
+        hbm=streams * rows * dim * b,
+        vmem=streams * rows * dim * b,
+        align=_util(rows, 8) * _util([dim], 128)[0],
+        ws=streams * rows * dim * b,
+    )
+
+
+def decompose_rmsnorm(X: dict, hw: TPUSpec) -> TaskArray:
+    return _rowwise(X, X.get("dtype_bytes", 2), 4.0, 0.0, 2.0)
+
+
+def decompose_silu_mul(X: dict, hw: TPUSpec) -> TaskArray:
+    return _rowwise(X, X.get("dtype_bytes", 2), 3.0, 1.0, 3.0)
+
+
+# ----------------------------------------------------------------------
+# Fused MoE (grouped GEMM, §VII case study): per-(expert, m-tile) tasks with
+# ragged token counts from routing — software work-queue scheduled. block_m /
+# block_f / stages are the tunable config (paper's BLOCK_SIZE / num_warps /
+# num_stages).
+# ----------------------------------------------------------------------
+
+
+def routing_counts(M: int, E: int, topk: int, skew: float, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    w = rng.dirichlet(np.full(E, max(0.05, 10.0 * (1.0 - skew))))
+    counts = np.floor(w * M * topk).astype(np.int64)
+    rem = M * topk - counts.sum()
+    counts[np.argsort(-w)[: int(rem)]] += 1
+    return counts
+
+
+def default_moe_config(X: dict, hw: TPUSpec) -> dict:
+    """The production kernel's config-selection logic. Tuned for the v5e
+    sweet spot — deliberately *not* revisited per generation, which is the
+    implementation shortcoming the paper's §VII diagnoses (its Triton kernel
+    was ill-suited to the A40)."""
+    return {"block_m": 128, "block_f": 512, "stages": 2}
+
+
+def decompose_fused_moe(X: dict, hw: TPUSpec) -> TaskArray:
+    M, E, topk = X["M"], X["E"], X["topk"]
+    H, N = X["H"], X["N"]
+    b = X.get("dtype_bytes", 2)
+    cfgd = default_moe_config(X, hw)
+    bm = X.get("block_m", cfgd["block_m"])
+    bf = X.get("block_f", cfgd["block_f"])
+    bf = min(bf, N)
+    counts = routing_counts(M, E, topk, X.get("skew", 0.3), X.get("seed", 0))
+    sizes = []
+    for c in counts:
+        c = int(c)
+        if c:
+            sizes.append(_tile_sizes(c, bm))
+    if not sizes:
+        return TaskArray.build(0)
+    m = np.concatenate(sizes)
+    n = len(m)
+    # per m-tile: all three expert matrices streamed once (weight-dominated)
+    w_bytes = 3.0 * H * N * b
+    return TaskArray.build(
+        n,
+        mxu=2.0 * m * 3.0 * H * N,
+        xu=m * N,
+        vpu=2.0 * m * N,
+        hbm=w_bytes + (2.0 * m * H + m * N) * b,
+        vmem=w_bytes + (2.0 * m * H + m * N) * b + m * H * 4,
+        align=_util(m, 8) * _util([min(bf, N)], 128)[0],
+        ws=(bm * H + (H + bm) * bf) * b * X.get("stages", cfgd["stages"]) + bm * H * 4,
+    )
+
+
+DECOMPOSERS = {
+    "gemm": decompose_gemm,
+    "scaled_mm": decompose_scaled_mm,
+    "attention": decompose_attention,
+    "rmsnorm": decompose_rmsnorm,
+    "silu_mul": decompose_silu_mul,
+    "fused_moe": decompose_fused_moe,
+}
+
+# which scheduling paradigm each family uses (paper Table V HW/SW column)
+SCHED_POLICY = {
+    "gemm": "static",
+    "scaled_mm": "static",
+    "attention": "static",
+    "rmsnorm": "static",
+    "silu_mul": "static",
+    "fused_moe": "workqueue",
+}
+
+
+def decompose(kind: str, X: dict, hw: TPUSpec) -> TaskArray:
+    return DECOMPOSERS[kind](X, hw)

@@ -1,0 +1,287 @@
+"""End-to-end inference prediction (paper §V-D).
+
+The Workload Generator lowers an ArchConfig + request shape + parallelism
+into the kernel-invocation sequence a serving engine would issue (sequential
+kernel execution, no overlap — the paper's stated assumption), plus the
+collective calls of TP/EP/PP. Kernel latencies come from a pluggable
+predictor (PipeWeave / baselines); communication from a data-driven
+regressor fitted on profiled collectives. The oracle E2E time sums hwsim
+kernel times + simulated comm — the "measured serving latency" analogue.
+
+Modeling conventions (documented deviations):
+  * one REGISTRY slice = one accelerator unit (the paper's "GPU"); TP/PP
+    span units, the slice's chips are the intra-unit parallelism;
+  * MoE EP over TP units: each unit runs ~M*topk/tp token-expert pairs on
+    E/tp local experts with 2 all-to-all hops;
+  * SSM (mamba2/hymba) lowers to the SSD chunked einsum structure expressed
+    as gemm + elementwise calls (its MXU/VPU demands), an approximation
+    noted in DESIGN.md;
+  * decode-phase cost integrates over growing KV via Simpson's rule on
+    3 sampled cache lengths (same approximation for oracle and predictors).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import hwsim
+from repro.core.dataset import featurize
+from repro.core.hardware import TPUSpec
+
+
+@dataclasses.dataclass
+class KernelCall:
+    kind: str
+    X: dict
+    count: int = 1
+
+
+@dataclasses.dataclass
+class CommCall:
+    op: str
+    nbytes: float
+    n_units: int
+    count: int = 1
+
+
+def _gemm(M, N, K, count=1):
+    return KernelCall("gemm", {"M": int(M), "N": int(max(N, 1)), "K": int(max(K, 1))}, count)
+
+
+def layer_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list:
+    """One decoder layer's kernel + comm sequence."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    T = B * qlen
+    calls: list = []
+
+    def attn_block():
+        out = [
+            KernelCall("rmsnorm", {"seq": T, "dim": d}),
+            _gemm(T, (Hq + 2 * Hkv) * hd // tp, d),
+            KernelCall(
+                "attention",
+                {
+                    "bs": B,
+                    "nkv": max(Hkv // tp, 1),
+                    "group": max(Hq // Hkv, 1),
+                    "hd": hd,
+                    "qlen": qlen,
+                    "kvlen": kvlen,
+                    "causal": 1,
+                },
+            ),
+            _gemm(T, d, Hq * hd // tp),
+        ]
+        if tp > 1:
+            out.append(CommCall("all_reduce", T * d * 2.0, tp))
+        return out
+
+    def ffn_block(dff):
+        out = [
+            KernelCall("rmsnorm", {"seq": T, "dim": d}),
+            _gemm(T, dff // tp, d, count=2),  # gate + up
+            KernelCall("silu_mul", {"seq": T, "dim": max(dff // tp, 1)}),
+            _gemm(T, d, dff // tp),
+        ]
+        if tp > 1:
+            out.append(CommCall("all_reduce", T * d * 2.0, tp))
+        return out
+
+    def ssm_block():
+        di, N, Q = cfg.d_inner, cfg.ssm_state, cfg.ssd_chunk
+        proj = 2 * di + 2 * cfg.ssm_groups * N + cfg.ssm_heads
+        out = [
+            KernelCall("rmsnorm", {"seq": T, "dim": d}),
+            _gemm(T, proj // tp, d),  # in_proj
+            # SSD chunked einsums (intra-chunk quadratic + state path)
+            _gemm(T, min(Q, max(qlen, 1)), N),  # C B^T scores
+            _gemm(T, cfg.ssm_headdim, min(Q, max(qlen, 1))),  # scores @ x
+            _gemm(T, cfg.ssm_headdim * N // max(tp, 1), 2),  # state update/out
+            KernelCall("silu_mul", {"seq": T, "dim": max(di // tp, 1)}),
+            _gemm(T, d, di // tp),  # out_proj
+        ]
+        if tp > 1:
+            out.append(CommCall("all_reduce", T * d * 2.0, tp))
+        return out
+
+    fam = cfg.family
+    if fam in ("dense", "audio", "vlm"):
+        calls += attn_block()
+        calls += ffn_block(cfg.d_ff)
+        if fam == "vlm" and cfg.cross_every:
+            # amortized gated cross-attn layer every (cross_every+1) layers
+            frac = 1.0 / cfg.cross_every
+            calls.append(
+                KernelCall(
+                    "attention",
+                    {
+                        "bs": B,
+                        "nkv": max(Hkv // tp, 1),
+                        "group": max(Hq // Hkv, 1),
+                        "hd": hd,
+                        "qlen": qlen,
+                        "kvlen": cfg.n_img_tokens,
+                        "causal": 0,
+                    },
+                    count=0 if qlen == 0 else 1,
+                )
+            )
+    elif fam == "moe":
+        calls += attn_block()
+        calls.append(KernelCall("rmsnorm", {"seq": T, "dim": d}))
+        E_unit = max(cfg.n_experts // tp, 1)
+        pairs = T * cfg.top_k
+        M_unit = max(int(math.ceil(pairs / tp)), 1)
+        calls.append(_gemm(T, cfg.n_experts, d))  # router
+        if tp > 1:
+            calls.append(CommCall("p2p", T * d * 2.0 * cfg.top_k / tp, tp, count=2))
+        calls.append(
+            KernelCall(
+                "fused_moe",
+                {
+                    "M": M_unit,
+                    "E": E_unit,
+                    "topk": 1,
+                    "H": d,
+                    "N": cfg.moe_hidden,
+                    "skew": 0.3,
+                    "seed": 7,
+                },
+            )
+        )
+        if cfg.dense_residual:
+            calls += ffn_block(cfg.d_ff)
+        if tp > 1:
+            calls.append(CommCall("all_reduce", T * d * 2.0, tp))
+    elif fam == "ssm":
+        calls += ssm_block()
+    elif fam == "hybrid":
+        calls += attn_block()
+        calls += ssm_block()
+        calls += ffn_block(cfg.d_ff)
+    return calls
+
+
+def model_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list:
+    calls = []
+    per_layer = layer_calls(cfg, B, qlen, kvlen, tp)
+    calls.append(("layers", cfg.n_layers, per_layer))
+    head = [
+        KernelCall("rmsnorm", {"seq": B * qlen, "dim": cfg.d_model}),
+        _gemm(B if qlen == 1 else B, cfg.padded_vocab // tp, cfg.d_model),
+    ]
+    if tp > 1:
+        head.append(CommCall("all_gather", B * cfg.padded_vocab // tp * 4.0, tp))
+    calls.append(("head", 1, head))
+    if cfg.family == "audio":
+        enc = layer_calls(
+            dataclasses.replace(cfg, family="dense"), B, cfg.enc_frames, cfg.enc_frames, tp
+        )
+        calls.append(("encoder", cfg.n_enc_layers, enc))
+    return calls
+
+
+# ----------------------------------------------------------------------
+# communication regressor (paper: RF on profiled comm database; here a
+# log-log regression per op fitted on profiled simulate_comm samples)
+# ----------------------------------------------------------------------
+
+
+class CommRegressor:
+    """Profiled-collective database + regression (paper §V-D): per (op,
+    participant-count) bucket, fit latency = alpha + beta*bytes on profiled
+    samples — the standard alpha-beta structure."""
+
+    def __init__(self):
+        self.theta: dict = {}
+
+    _NS = (2, 4, 8, 16)
+
+    def fit(self, hw: TPUSpec, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        for op in ("all_reduce", "all_gather", "reduce_scatter", "p2p"):
+            for n in self._NS:
+                rows, ys = [], []
+                for _ in range(60):
+                    nbytes = float(np.exp(rng.uniform(np.log(1e3), np.log(1e9))))
+                    t = hwsim.simulate_comm(op, nbytes, n, hw)
+                    rows.append([1.0, nbytes])
+                    ys.append(t)
+                A = np.asarray(rows)
+                y = np.asarray(ys)
+                # weight by 1/t: minimize *relative* error so the alpha
+                # (latency) regime isn't drowned out by GB-sized samples
+                Aw = A / y[:, None]
+                self.theta[(op, n)], *_ = np.linalg.lstsq(Aw, np.ones_like(y), rcond=None)
+        return self
+
+    def predict(self, op: str, nbytes: float, n: int) -> float:
+        if n <= 1 or nbytes <= 0:
+            return 0.0
+        nb = min(self._NS, key=lambda x: abs(math.log(x) - math.log(max(n, 2))))
+        a, b = self.theta[(op, nb)]
+        return float(max(a + b * nbytes, 1e-7))
+
+
+# ----------------------------------------------------------------------
+# E2E evaluation
+# ----------------------------------------------------------------------
+
+
+def _sum_calls(calls, kernel_time: Callable, comm_time: Callable) -> float:
+    total = 0.0
+    for _, reps, seq in calls:
+        t = 0.0
+        for c in seq:
+            if isinstance(c, KernelCall):
+                t += c.count * kernel_time(c.kind, c.X)
+            else:
+                t += c.count * comm_time(c.op, c.nbytes, c.n_units)
+        total += reps * t
+    return total
+
+
+def step_time(
+    cfg: ArchConfig, B: int, qlen: int, kvlen: int, *, tp: int,
+    kernel_time: Callable, comm_time: Callable,
+) -> float:
+    return _sum_calls(model_calls(cfg, B, qlen, kvlen, tp), kernel_time, comm_time)
+
+
+def request_latency(
+    cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
+    kernel_time: Callable, comm_time: Callable,
+) -> float:
+    """prefill + Simpson-integrated decode, with a GPipe-style PP surcharge."""
+    pre = step_time(cfg, B, lin, lin, tp=tp, kernel_time=kernel_time, comm_time=comm_time)
+    d0 = step_time(cfg, B, 1, lin, tp=tp, kernel_time=kernel_time, comm_time=comm_time)
+    dm = step_time(cfg, B, 1, lin + lout // 2, tp=tp, kernel_time=kernel_time, comm_time=comm_time)
+    d1 = step_time(cfg, B, 1, lin + lout, tp=tp, kernel_time=kernel_time, comm_time=comm_time)
+    dec = lout * (d0 + 4 * dm + d1) / 6.0
+    total = pre + dec
+    if pp > 1:
+        # stage boundary activations, per token step and per prefill
+        boundary = (pp - 1) * (B * cfg.d_model * 2.0)
+        total += comm_time("p2p", boundary * lin, 2) + lout * comm_time("p2p", boundary, 2)
+        total *= 1.0 + 0.5 * (pp - 1) / pp  # bubble surcharge (single request)
+    return total
+
+
+def oracle_times(hw: TPUSpec):
+    """(kernel_time, comm_time) backed by hwsim — the 'measured' system."""
+    return (
+        lambda kind, X: hwsim.simulate(kind, X, hw),
+        lambda op, b, n: hwsim.simulate_comm(op, b, n, hw),
+    )
+
+
+def predictor_times(pw, hw: TPUSpec, comm: CommRegressor):
+    return (
+        lambda kind, X: pw.predict_latency(kind, X, hw),
+        lambda op, b, n: comm.predict(op, b, n),
+    )

@@ -1,0 +1,61 @@
+"""Performance Estimator (paper §IV-D): one lightweight MLP per kernel
+family consuming the analytical feature vector; latency is recovered as
+theoretical_time / predicted_efficiency."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+
+import numpy as np
+
+from repro.core.dataset import KernelDataset, build_dataset, featurize, SEEN
+from repro.core.hardware import REGISTRY, TPUSpec
+from repro.core.nn import TrainedMLP, fit_mlp
+
+
+@dataclasses.dataclass
+class PipeWeave:
+    models: dict  # kind -> TrainedMLP
+
+    def predict_eff(self, kind: str, feats: np.ndarray) -> np.ndarray:
+        return np.clip(self.models[kind].predict(feats), 1e-3, 1.0)
+
+    def predict_latency(self, kind: str, X: dict, hw: TPUSpec) -> float:
+        fs = featurize(kind, X, hw)
+        eff = self.predict_eff(kind, fs.vector(hw)[None])[0]
+        return float(fs.theoretical_s / eff)
+
+    def predict_dataset(self, ds: KernelDataset) -> np.ndarray:
+        eff = self.predict_eff(ds.kind, ds.X)
+        return ds.theoretical_s / eff
+
+    def save(self, path: str):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "wb") as f:
+            pickle.dump(self, f)
+
+    @staticmethod
+    def load(path: str) -> "PipeWeave":
+        with open(path, "rb") as f:
+            return pickle.load(f)
+
+
+def train_pipeweave(
+    datasets: dict[str, KernelDataset],
+    *,
+    seed: int = 0,
+    max_epochs: int = 250,
+    verbose: bool = False,
+) -> PipeWeave:
+    """Train per-kernel MLPs on SEEN hardware rows only (paper's split)."""
+    models = {}
+    for kind, ds in datasets.items():
+        tr = ds.mask_hw(SEEN)
+        if verbose:
+            print(f"[pipeweave] training {kind}: {len(tr.X)} rows")
+        models[kind] = fit_mlp(
+            tr.X, tr.y_eff, seed=seed, max_epochs=max_epochs, loss_kind="mape",
+            verbose=verbose,
+        )
+    return PipeWeave(models=models)

@@ -1,0 +1,179 @@
+"""Pure-JAX MLP with BatchNorm + Dropout and a MAPE / pinball-loss trainer
+(paper §V-C): 3 hidden layers (256/128/64), ReLU, sigmoid head predicting
+execution efficiency in [0, 1]. AdamW (reused from repro.optim), early
+stopping on validation loss."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import AdamW, constant_lr
+
+HIDDEN = (256, 128, 64)
+
+
+def init_mlp(key, in_dim: int, hidden=HIDDEN):
+    params = {"layers": []}
+    dims = [in_dim, *hidden, 1]
+    ks = jax.random.split(key, len(dims))
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        layer = {
+            "w": (jax.random.normal(ks[i], (a, b)) * jnp.sqrt(2.0 / a)).astype(jnp.float32),
+            "b": jnp.zeros((b,), jnp.float32),
+        }
+        if i < len(dims) - 2:  # BatchNorm on hidden layers
+            layer["bn_scale"] = jnp.ones((b,), jnp.float32)
+            layer["bn_bias"] = jnp.zeros((b,), jnp.float32)
+        params["layers"].append(layer)
+    state = {
+        "bn_mean": [jnp.zeros((h,), jnp.float32) for h in hidden],
+        "bn_var": [jnp.ones((h,), jnp.float32) for h in hidden],
+    }
+    return params, state
+
+
+def mlp_forward(params, state, x, *, train: bool, rng=None, dropout: float = 0.1,
+                momentum: float = 0.99):
+    """Returns (sigmoid output in (0,1), new_state)."""
+    new_mean, new_var = [], []
+    h = x
+    n_hidden = len(params["layers"]) - 1
+    for i, layer in enumerate(params["layers"]):
+        h = h @ layer["w"] + layer["b"]
+        if i < n_hidden:
+            if train:
+                mu = jnp.mean(h, axis=0)
+                var = jnp.var(h, axis=0) + 1e-5
+                new_mean.append(momentum * state["bn_mean"][i] + (1 - momentum) * mu)
+                new_var.append(momentum * state["bn_var"][i] + (1 - momentum) * var)
+            else:
+                mu, var = state["bn_mean"][i], state["bn_var"][i] + 1e-5
+            h = (h - mu) / jnp.sqrt(var)
+            h = h * layer["bn_scale"] + layer["bn_bias"]
+            h = jax.nn.relu(h)
+            if train and dropout > 0 and rng is not None:
+                rng, sub = jax.random.split(rng)
+                keep = jax.random.bernoulli(sub, 1 - dropout, h.shape)
+                h = jnp.where(keep, h / (1 - dropout), 0.0)
+    out = jax.nn.sigmoid(h[:, 0])
+    new_state = (
+        {"bn_mean": new_mean, "bn_var": new_var} if train and new_mean else state
+    )
+    return out, new_state
+
+
+def mape_loss(pred_eff, y_eff):
+    """MAPE on efficiency (the paper's training objective)."""
+    return jnp.mean(jnp.abs(pred_eff - y_eff) / jnp.maximum(y_eff, 1e-3))
+
+
+def pinball_loss(pred, y, q: float):
+    """Quantile (pinball) loss — §VII-A P80 ceiling objective."""
+    diff = y - pred
+    return jnp.mean(jnp.maximum(q * diff, (q - 1) * diff) / jnp.maximum(y, 1e-3))
+
+
+@jax.jit
+def _eval_forward(params, state, x):
+    return mlp_forward(params, state, x, train=False)[0]
+
+
+@dataclasses.dataclass
+class TrainedMLP:
+    params: dict
+    state: dict
+    mu_x: np.ndarray
+    sd_x: np.ndarray
+    y_floor: float = 1e-3  # sigmoid-collapse guard: no training row was
+    # below this efficiency, so predictions aren't allowed to be either
+    # (latency = theo/eff amplifies eff underestimates unboundedly)
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        Xn = (X - self.mu_x) / self.sd_x
+        out = _eval_forward(self.params, self.state, jnp.asarray(Xn, jnp.float32))
+        return np.clip(np.asarray(out), self.y_floor, 1.0)
+
+
+def fit_mlp(
+    X: np.ndarray,
+    y: np.ndarray,
+    *,
+    seed: int = 0,
+    lr: float = 1e-3,
+    weight_decay: float = 1e-4,
+    batch: int = 512,
+    max_epochs: int = 250,
+    patience: int = 30,
+    min_epochs: int = 40,
+    loss_kind: str = "mape",
+    quantile: float = 0.8,
+    val_frac: float = 0.1,
+    verbose: bool = False,
+) -> TrainedMLP:
+    rng = np.random.default_rng(seed)
+    n = len(X)
+    perm = rng.permutation(n)
+    n_val = max(int(n * val_frac), 1)
+    val_idx, tr_idx = perm[:n_val], perm[n_val:]
+    mu_x = X[tr_idx].mean(0)
+    sd_x = X[tr_idx].std(0) + 1e-6
+    Xn = (X - mu_x) / sd_x
+    Xtr, ytr = jnp.asarray(Xn[tr_idx]), jnp.asarray(y[tr_idx])
+    Xva, yva = jnp.asarray(Xn[val_idx]), jnp.asarray(y[val_idx])
+
+    params, state = init_mlp(jax.random.PRNGKey(seed), X.shape[1])
+    opt = AdamW(lr=constant_lr(lr), weight_decay=weight_decay, clip_norm=1.0)
+    opt_state = opt.init(params)
+
+    def loss_fn(params, state, xb, yb, rng):
+        pred, new_state = mlp_forward(params, state, xb, train=True, rng=rng)
+        if loss_kind == "mape":
+            return mape_loss(pred, yb), new_state
+        return pinball_loss(pred, yb, quantile), new_state
+
+    @jax.jit
+    def step(params, state, opt_state, xb, yb, rng):
+        (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, state, xb, yb, rng
+        )
+        params, opt_state, _ = opt.update(grads, opt_state, params)
+        return params, new_state, opt_state, loss
+
+    @jax.jit
+    def val_loss(params, state):
+        pred, _ = mlp_forward(params, state, Xva, train=False)
+        if loss_kind == "mape":
+            return mape_loss(pred, yva)
+        return pinball_loss(pred, yva, quantile)
+
+    key = jax.random.PRNGKey(seed + 1)
+    best = (np.inf, params, state)
+    bad = 0
+    n_tr = len(tr_idx)
+    steps_per_epoch = max(n_tr // batch, 1)
+    for epoch in range(max_epochs):
+        order = rng.permutation(n_tr)
+        for s in range(steps_per_epoch):
+            idx = order[s * batch : (s + 1) * batch]
+            key, sub = jax.random.split(key)
+            params, state, opt_state, _ = step(
+                params, state, opt_state, Xtr[idx], ytr[idx], sub
+            )
+        vl = float(val_loss(params, state))
+        if verbose and epoch % 10 == 0:
+            print(f"  epoch {epoch:3d} val={vl:.4f}")
+        if vl < best[0] - 1e-5:
+            best = (vl, jax.tree.map(jnp.copy, params), jax.tree.map(jnp.copy, state))
+            bad = 0
+        else:
+            bad += 1
+            if bad >= patience and epoch >= min_epochs:
+                break
+    _, params, state = best
+    floor = float(max(np.min(y) * 0.5, 1e-3))
+    return TrainedMLP(params=params, state=state, mu_x=mu_x, sd_x=sd_x, y_floor=floor)

@@ -1,0 +1,50 @@
+"""jit'd wrapper: model-layout (B, S, H, D) GQA attention dispatching to the
+Pallas kernel (TPU) or the jnp reference (CPU / dry-run tracing)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_k", "interpret", "use_pallas",
+    ),
+)
+def attention(
+    q,  # (B, S, Hq, D)
+    k,  # (B, Skv, Hkv, D)
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+    use_pallas: bool = True,
+):
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = (
+        q.reshape(B, S, Hkv, G, D)
+        .transpose(0, 2, 3, 1, 4)
+        .reshape(B * Hkv * G, S, D)
+    )
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, -1, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, -1, D)
+    fn = flash_attention_pallas if use_pallas else flash_attention_ref
+    kw = dict(group=G, causal=causal, window=window, softcap=softcap)
+    if use_pallas:
+        kw.update(block_q=block_q, block_k=block_k, interpret=interpret)
+    of = fn(qf, kf, vf, **kw)
+    return (
+        of.reshape(B, Hkv, G, S, D).transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D)
+    )

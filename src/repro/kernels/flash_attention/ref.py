@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Reuses the model stack's chunked attention (single source of truth for
+numerics): a dense masked-softmax attention over the same layout the kernel
+consumes."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q,  # (BKG, S, D)
+    k,  # (BK, Skv, D)
+    v,
+    *,
+    group: int,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+):
+    BKG, S, D = q.shape
+    BK, Skv, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    kx = jnp.repeat(k, group, axis=0)
+    vx = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kx.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None], s, -1.0e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p, vx.astype(jnp.float32)).astype(q.dtype)

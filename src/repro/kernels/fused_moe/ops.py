@@ -1,0 +1,20 @@
+"""jit'd wrapper for the fused MoE kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.fused_moe.kernel import fused_moe_pallas
+from repro.kernels.fused_moe.ref import fused_moe_ref
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_f", "interpret", "use_pallas"))
+def fused_moe(
+    x, w_gate, w_up, w_down, *, block_m=128, block_f=256, interpret=True, use_pallas=True
+):
+    if not use_pallas:
+        return fused_moe_ref(x, w_gate, w_up, w_down)
+    return fused_moe_pallas(
+        x, w_gate, w_up, w_down, block_m=block_m, block_f=block_f, interpret=interpret
+    )

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused MoE grouped-GEMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_moe_ref(x, w_gate, w_up, w_down):
+    x32 = x.astype(jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", x32, w_gate.astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", x32, w_up.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(jnp.float32))
+    return y.astype(x.dtype)

@@ -1,0 +1,13 @@
+from functools import partial
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret", "use_pallas"))
+def rmsnorm(x, w, *, eps=1e-6, block_rows=256, interpret=True, use_pallas=True):
+    if not use_pallas:
+        return rmsnorm_ref(x, w, eps)
+    return rmsnorm_pallas(x, w, eps=eps, block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle: re-exports the model stack's RMSNorm."""
+from repro.models.layers import rmsnorm as rmsnorm_ref  # noqa: F401

@@ -1,0 +1,19 @@
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.scaled_mm.kernel import scaled_mm_pallas
+from repro.kernels.scaled_mm.ref import scaled_mm_ref
+
+
+@partial(jax.jit, static_argnames=("out_dtype", "block_m", "block_n", "block_k",
+                                   "interpret", "use_pallas"))
+def scaled_mm(x, w, sx, sw, *, out_dtype=jnp.bfloat16, block_m=128, block_n=128,
+              block_k=256, interpret=True, use_pallas=True):
+    if not use_pallas:
+        return scaled_mm_ref(x, w, sx, sw, out_dtype)
+    return scaled_mm_pallas(
+        x, w, sx, sw, out_dtype=out_dtype,
+        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+    )

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the W8A8 scaled matmul."""
+import jax.numpy as jnp
+
+
+def scaled_mm_ref(x, w, sx, sw, out_dtype=jnp.bfloat16):
+    acc = jnp.matmul(
+        x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    deq = acc.astype(jnp.float32) * sx[:, None].astype(jnp.float32) * sw[None, :].astype(jnp.float32)
+    return deq.astype(out_dtype)
+
+
+def quantize_rowwise(a):
+    """fp -> (int8, per-row scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(a), axis=1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(a / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

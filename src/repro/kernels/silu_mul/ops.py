@@ -1,0 +1,13 @@
+from functools import partial
+
+import jax
+
+from repro.kernels.silu_mul.kernel import silu_mul_pallas
+from repro.kernels.silu_mul.ref import silu_mul_ref
+
+
+@partial(jax.jit, static_argnames=("act", "block_rows", "interpret", "use_pallas"))
+def act_mul(g, u, *, act="silu", block_rows=256, interpret=True, use_pallas=True):
+    if not use_pallas:
+        return silu_mul_ref(g, u, act=act)
+    return silu_mul_pallas(g, u, act=act, block_rows=block_rows, interpret=interpret)

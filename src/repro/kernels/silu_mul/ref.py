@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for SiLU&Mul / GeGLU&Mul."""
+import jax
+import jax.numpy as jnp
+
+
+def silu_mul_ref(g, u, *, act: str = "silu"):
+    g32, u32 = g.astype(jnp.float32), u.astype(jnp.float32)
+    h = jax.nn.gelu(g32, approximate=True) if act == "geglu" else jax.nn.silu(g32)
+    return (h * u32).astype(g.dtype)

@@ -1,0 +1,299 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.
+
+For every (architecture x input shape) cell and both production meshes
+(single pod 16x16, multi-pod 2x16x16) this lowers + compiles the step
+function against ShapeDtypeStruct inputs, records ``memory_analysis()`` /
+``cost_analysis()``, and parses the post-SPMD optimized HLO for collective
+operand bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute) — the inputs to EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, all_cells, get_arch
+from repro.dist.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+    to_named,
+    use_mesh,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model, input_specs
+from repro.optim.adamw import AdamWState
+from repro.train.step import TrainConfig, init_train_state, make_optimizer, make_train_step
+
+
+# ----------------------------------------------------------------------
+# HLO collective parsing
+# ----------------------------------------------------------------------
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device operand bytes of every collective op in optimized HLO.
+
+    Returns {op_kind: {'bytes': int, 'count': int}} plus a '_total'."""
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # ops look like: %name = bf16[128,32]{1,0} all-gather(...), replica_groups=...
+        m = re.match(r"^%?[\w.-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*([a-z0-9-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for k in _COLLECTIVES:
+            if op == k or op.startswith(k + "-"):  # e.g. all-reduce-start
+                kind = k
+                break
+        if kind is None or op.endswith("-done"):
+            continue
+        out[kind]["bytes"] += _shape_bytes(m.group(1))
+        out[kind]["count"] += 1
+    out["_total_bytes"] = sum(v["bytes"] for k, v in out.items() if isinstance(v, dict))
+    out["_total_count"] = sum(v["count"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+# ----------------------------------------------------------------------
+# per-cell lowering
+# ----------------------------------------------------------------------
+
+
+def state_pspecs(state_shapes, mesh):
+    return {
+        "params": param_pspecs(state_shapes["params"], mesh),
+        "opt": AdamWState(
+            step=P(),
+            mu=param_pspecs(state_shapes["opt"].mu, mesh),
+            nu=param_pspecs(state_shapes["opt"].nu, mesh),
+        ),
+        "step": P(),
+        "err": None,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Lower + compile one cell. Returns (lowered, compiled, meta)."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if not cfg.supports_shape(shape):
+        raise ValueError(f"{arch} x {shape_name}: documented skip (DESIGN.md)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    api = build_model(cfg)
+    specs = input_specs(cfg, shape)
+
+    with use_mesh(mesh):
+        params_shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        p_sh = to_named(param_pspecs(params_shapes, mesh), mesh)
+
+        if shape.kind == "train":
+            tc = TrainConfig()
+            optimizer = make_optimizer(tc)
+            state_shapes = jax.eval_shape(
+                lambda: init_train_state(api, optimizer, jax.random.PRNGKey(0))
+            )
+            s_spec = state_pspecs(state_shapes, mesh)
+            s_sh = to_named(s_spec, mesh)
+            b_sh = to_named(batch_pspecs(specs["batch"], mesh), mesh)
+            step_fn = make_train_step(api, optimizer, tc)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(s_sh, b_sh),
+                out_shardings=(s_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_shapes, specs["batch"])
+        elif shape.kind == "prefill":
+            from repro.dist.sharding import resolve_pspec
+
+            b_sh = to_named(batch_pspecs(specs["batch"], mesh), mesh)
+            cache_shapes = jax.eval_shape(
+                lambda p, b: api.prefill(p, b)[1], params_shapes, specs["batch"]
+            )
+            c_out = to_named(cache_pspecs(cache_shapes, mesh), mesh)
+            logits_sh = NamedSharding(
+                mesh,
+                resolve_pspec((shape.global_batch, cfg.padded_vocab), ("batch", "tp"), mesh),
+            )
+            lowered = jax.jit(
+                api.prefill,
+                in_shardings=(p_sh, b_sh),
+                out_shardings=(logits_sh, c_out),
+            ).lower(params_shapes, specs["batch"])
+        else:  # decode
+            from repro.dist.sharding import resolve_pspec
+
+            c_sh = to_named(cache_pspecs(specs["cache"], mesh), mesh)
+            tok_sh = to_named(batch_pspecs({"t": specs["tokens"]}, mesh), mesh)["t"]
+            logits_sh = NamedSharding(
+                mesh,
+                resolve_pspec((shape.global_batch, cfg.padded_vocab), ("batch", "tp"), mesh),
+            )
+            lowered = jax.jit(
+                api.decode,
+                in_shardings=(p_sh, c_sh, tok_sh, tok_sh),
+                out_shardings=(logits_sh, c_sh),
+                donate_argnums=(1,),
+            ).lower(params_shapes, specs["cache"], specs["tokens"], specs["positions"])
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.devices.size,
+        "compile_s": round(compile_s, 1),
+    }
+    return lowered, compiled, meta
+
+
+def analyze(lowered, compiled, meta) -> dict:
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # noqa: BLE001
+        mem_d = {"error": str(e)}
+    text = compiled.as_text()
+    walk = analyze_hlo(text)  # loop-aware per-device costs (see roofline/)
+    out = dict(meta)
+    # raw XLA numbers (while bodies counted once — kept for reference)
+    out["xla_flops_raw"] = cost.get("flops")
+    out["xla_bytes_raw"] = cost.get("bytes accessed")
+    # loop-aware per-device numbers used by §Roofline
+    out["flops"] = walk.flops
+    out["dot_flops"] = walk.dot_flops
+    out["vector_ops"] = walk.vector_ops
+    out["transcendentals"] = walk.transcendentals
+    out["hbm_bytes"] = walk.hbm_bytes
+    out["memory"] = mem_d
+    out["collectives"] = {
+        **walk.collectives,
+        "_total_bytes": walk.collective_bytes,
+    }
+    out["unknown_ops"] = walk.unknown_ops
+    out["hlo_lines"] = len(text.splitlines())
+    return out
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool, print_analysis=True, hlo_path=None
+) -> dict:
+    lowered, compiled, meta = lower_cell(arch, shape_name, multi_pod)
+    result = analyze(lowered, compiled, meta)
+    if hlo_path:
+        import zstandard
+
+        with open(hlo_path, "wb") as f:
+            f.write(zstandard.compress(compiled.as_text().encode()))
+    if print_analysis:
+        print(json.dumps(result, indent=2, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+
+    n_fail = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape_name}__{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip cached] {tag}")
+                continue
+            print(f"[dry-run] {tag}", flush=True)
+            try:
+                hlo_dir = os.path.join(args.out, "hlo")
+                os.makedirs(hlo_dir, exist_ok=True)
+                result = run_cell(
+                    arch, shape_name, mp, print_analysis=False,
+                    hlo_path=os.path.join(hlo_dir, tag + ".hlo.zst"),
+                )
+                with open(path, "w") as f:
+                    json.dump(result, f, indent=2, default=str)
+                print(
+                    f"  ok: flops={result['flops']:.3e} "
+                    f"coll={result['collectives']['_total_bytes']:.3e}B "
+                    f"compile={result['compile_s']}s",
+                    flush=True,
+                )
+            except Exception:  # noqa: BLE001
+                n_fail += 1
+                with open(path + ".fail", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"  FAIL ({tag}) — see {path}.fail", flush=True)
+    print(f"done; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,18 @@
+"""Production mesh construction.
+
+Defined as functions (not module-level constants) so importing this module
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests / small-scale runs."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

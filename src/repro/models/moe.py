@@ -1,0 +1,104 @@
+"""Mixture-of-Experts layer (top-k, capacity-based Switch/GSPMD dispatch).
+
+Tokens are flattened and re-grouped into dispatch groups of ``cfg.moe_group``
+tokens; within each group every expert has capacity
+``C = ceil(group * top_k / E * capacity_factor)``. Dispatch/combine are dense
+einsums over one-hot masks — the formulation GSPMD shards cleanly with
+experts on the "model" axis (EP) and groups on the "data" axis. The einsum
+overhead is ~E*C/(k*3*d_ff) of useful FLOPs (<3% at group=512 for the
+assigned MoE archs); a sort-based dropless path is a recorded hillclimb item.
+
+Decode (seq==1) collapses to a single group so expert capacity stays tiny.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, ffn, init_ffn
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    d, f, E = cfg.d_model, cfg.moe_hidden, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype),
+        "w_gate": dense_init(ks[1], (E, d, f), dtype, in_axis=1),
+        "w_up": dense_init(ks[2], (E, d, f), dtype, in_axis=1),
+        "w_down": dense_init(ks[3], (E, f, d), dtype, in_axis=1),
+    }
+    if cfg.dense_residual:
+        p["dense"] = init_ffn(ks[4], cfg, dtype, d_ff=cfg.d_ff)
+    return p
+
+
+def _capacity(group: int, cfg: ArchConfig, train: bool) -> int:
+    cf = cfg.capacity_factor if train else max(cfg.capacity_factor, 2.0)
+    c = int(math.ceil(group * cfg.top_k / cfg.n_experts * cf))
+    return max(c, cfg.top_k)
+
+
+def moe_layer(p, x, cfg: ArchConfig, *, train: bool):
+    """x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    Sg = next(g for g in range(min(cfg.moe_group, T), 0, -1) if T % g == 0)
+    G = T // Sg
+    xg = xt.reshape(G, Sg, d)
+
+    # ---- routing --------------------------------------------------------
+    logits = (xg @ p["router"]).astype(jnp.float32)  # (G, Sg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, K)  # (G, Sg, K)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # ---- capacity assignment (priority: slot k, then token order) --------
+    C = _capacity(Sg, cfg, train)
+    onehot = jax.nn.one_hot(top_ids, E, dtype=jnp.float32)  # (G, Sg, K, E)
+    # rank within expert, counting slot-major: (k, s) flattened with k outer
+    flat = jnp.moveaxis(onehot, 2, 1).reshape(G, K * Sg, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat  # tokens ahead of me
+    pos = jnp.moveaxis(pos_flat.reshape(G, K, Sg, E), 1, 2)  # (G, Sg, K, E)
+    pos = jnp.sum(pos * onehot, axis=-1)  # (G, Sg, K)
+    pos = pos.astype(jnp.int32)
+    keep = pos < C
+    top_w = top_w * keep  # dropped tokens lose their expert
+
+    # ---- dispatch / combine tensors --------------------------------------
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # combine[g, s, e, c] = sum_k w[g,s,k] * onehot_e * onehot_c
+    combine = jnp.einsum("gske,gskc->gsec", onehot * top_w[..., None], pos_oh)
+    if cfg.moe_bf16_combine:  # §Perf: halve dispatch/combine HBM traffic
+        combine = combine.astype(x.dtype)
+    dispatch = (combine > 0).astype(x.dtype)
+
+    from repro.dist.sharding import constrain
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)  # (G, E, C, d)
+    xe = constrain(xe, ("batch", "experts", None, None))
+    # ---- expert FFN (SwiGLU) ---------------------------------------------
+    gte = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(x.dtype))
+    up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
+    act = jax.nn.silu(gte) * up
+    ye = jnp.einsum("gecf,efd->gecd", act, p["w_down"].astype(x.dtype))
+
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+    out = out.reshape(B, S, d)
+
+    # ---- auxiliary load-balancing loss (Switch) ---------------------------
+    me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_ids[..., 0], E, dtype=jnp.float32), axis=1)
+        / Sg,
+        axis=0,
+    )
+    aux = E * jnp.sum(me * ce)
+
+    if cfg.dense_residual:
+        out = out + ffn(p["dense"], x, cfg)
+    return out, aux

@@ -1,0 +1,106 @@
+"""Public model API: build once from an ArchConfig, get pure functions.
+
+`input_specs(cfg, shape)` produces ShapeDtypeStruct stand-ins for every model
+input of a dry-run cell — weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+
+
+class ModelApi(NamedTuple):
+    cfg: ArchConfig
+    init: Callable[[Any], Any]
+    loss: Callable[[Any, Any], Any]  # (params, batch) -> (loss, metrics)
+    prefill: Callable[[Any, Any], Any]  # (params, batch) -> (logits, caches)
+    decode: Callable[[Any, Any, Any, Any], Any]  # (params, caches, tok, pos)
+    init_cache: Callable[[int, int], Any]  # (batch, max_len) -> caches
+
+
+def build_model(cfg: ArchConfig) -> ModelApi:
+    def init(key):
+        return T.init_params(cfg, key)
+
+    def loss(params, batch):
+        return T.train_loss(params, cfg, batch)
+
+    def prefill(params, batch):
+        hidden, _, caches = T.forward(params, cfg, batch, "prefill")
+        # only the last position's logits are needed to start decoding;
+        # slicing before the LM head keeps prefill head cost O(B*V)
+        logits_last = T.full_logits(params, cfg, hidden[:, -1:, :])[:, 0, :]
+        return logits_last, caches
+
+    def decode(params, caches, tokens, positions):
+        return T.decode_step(params, cfg, caches, tokens, positions)
+
+    def init_cache(batch, max_len):
+        return T.init_cache(cfg, batch, max_len)
+
+    return ModelApi(cfg, init, loss, prefill, decode, init_cache)
+
+
+# ----------------------------------------------------------------------
+# dry-run input specs
+# ----------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ArchConfig, B: int, S: int) -> dict:
+    """Token batch (+ stubbed modality frontends) for train/prefill."""
+    specs = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        specs["frames"] = _sds((B, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "vlm":
+        specs["image_embeds"] = _sds(
+            (B, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+        )
+    return specs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """All abstract inputs for the step function of a dry-run cell.
+
+    train   -> {'batch': ...}
+    prefill -> {'batch': ...}
+    decode  -> {'cache': ..., 'tokens': (B,), 'positions': (B,)}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_specs(cfg, B, S)}
+    # decode: one new token with a KV cache of seq_len
+    api = build_model(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(B, S))
+    return {
+        "cache": cache,
+        "tokens": _sds((B,), jnp.int32),
+        "positions": _sds((B,), jnp.int32),
+    }
+
+
+def materialize_batch(cfg: ArchConfig, B: int, S: int, seed: int = 0) -> dict:
+    """Concrete random batch matching batch_specs (smoke tests/examples)."""
+    k = jax.random.PRNGKey(seed)
+    out = {
+        "tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size, dtype=jnp.int32)
+    }
+    if cfg.family == "audio":
+        out["frames"] = 0.1 * jax.random.normal(
+            jax.random.fold_in(k, 1), (B, cfg.enc_frames, cfg.d_model)
+        ).astype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        out["image_embeds"] = 0.1 * jax.random.normal(
+            jax.random.fold_in(k, 2), (B, cfg.n_img_tokens, cfg.d_model)
+        ).astype(cfg.compute_dtype)
+    return out

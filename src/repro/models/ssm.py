@@ -1,0 +1,220 @@
+"""Mamba-2 / SSD (state-space duality) blocks.
+
+Implements the chunked SSD algorithm: quadratic attention-like computation
+inside fixed-size chunks plus a linear recurrence over chunk states
+(lax.scan), which is the TPU-friendly formulation (MXU-heavy intra-chunk
+einsums, sequential-but-tiny inter-chunk scan). Decode maintains a recurrent
+(conv, ssm) state and costs O(1) per token.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, conv_dim, W-1) rolling window of recent inputs
+    ssm: jax.Array  # (B, H, P, N) recurrent state
+
+
+def conv_dim(cfg: ArchConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_ssm(key, cfg: ArchConfig, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H, W = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    proj_out = 2 * di + 2 * G * N + H
+    # dt bias: inverse softplus of dt ~ U[1e-3, 0.1]
+    dt = jnp.exp(
+        jax.random.uniform(ks[3], (H,)) * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (conv_dim(cfg), W))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim(cfg),), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], (H,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + conv_dim(cfg)]
+    dt = zxbcdt[..., di + conv_dim(cfg) :]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width W. xBC: (B, L, C); w: (C, W)."""
+    W = w.shape[-1]
+    pads = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pads[:, i : i + xBC.shape[1], :] * w[None, None, :, W - 1 - i]
+        for i in range(W)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b, l, h, p) pre-multiplied by nothing (dt applied inside)
+    dt: (b, l, h) positive; A: (h,) negative; B, C: (b, l, g, n)
+    Returns y (b, l, h, p) and final state (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    l_orig = l
+    if l % chunk:
+        # zero-pad the tail: dt=0 makes padded steps identity transitions
+        # (decay exp(0)=1, zero state/output contribution)
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc, Q = l // chunk, chunk
+    rep = h // g  # heads per B/C group
+
+    f32 = jnp.float32
+    xdt = (x.astype(f32) * dt[..., None].astype(f32)).reshape(b, nc, Q, h, p)
+    dA = (dt.astype(f32) * A.astype(f32)[None, None, :]).reshape(b, nc, Q, h)
+    Bc = B.astype(f32).reshape(b, nc, Q, g, n)
+    Cc = C.astype(f32).reshape(b, nc, Q, g, n)
+    # expand groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b, nc, Q, h, n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    cum = jnp.cumsum(dA, axis=2)  # (b, nc, Q, h)
+
+    # --- intra-chunk (block-diagonal) term -----------------------------
+    # L[i, j] = exp(cum_i - cum_j + dA_j)  for i >= j  (decay from j to i,
+    # including step j's own dt*A applied at input time j)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b, nc, Qi, Qj, h)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh) * Lmat
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", scores, xdt)
+
+    # --- chunk states ---------------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b, nc, Q, h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, decay_to_end, xdt)
+
+    # --- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b, nc, h)
+
+    def step(s_prev, inp):
+        st, cd = inp  # (b, h, p, n), (b, h)
+        s_new = s_prev * cd[:, :, None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((b, h, p, n), f32)
+    final, prev_states = lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b, nc, h, p, n)
+
+    # --- state -> output -------------------------------------------------
+    decay_from_start = jnp.exp(cum)  # (b, nc, Q, h)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, decay_from_start
+    )
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y[:, :l_orig], final
+
+
+def ssm_layer(p, x, cfg: ArchConfig):
+    """Full Mamba-2 mixer for train/prefill. x: (B, L, d). Returns
+    (out, SSMState) — the state enables prefill->decode handoff."""
+    B, L, _ = x.shape
+    di, G, N, H, P = (
+        cfg.d_inner,
+        cfg.ssm_groups,
+        cfg.ssm_state,
+        cfg.ssm_heads,
+        cfg.ssm_headdim,
+    )
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :di].reshape(B, L, H, P)
+    Bm = xBC[..., di : di + G * N].reshape(B, L, G, N)
+    Cm = xBC[..., di + G * N :].reshape(B, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, final = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssd_chunk)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, L, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["out_proj"]
+    # conv state holds the *pre-activation* last W-1 inputs (oldest first)
+    raw_xBC = _split_proj(cfg, zxbcdt)[1]
+    W = cfg.conv_width
+    pad = jnp.pad(raw_xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    conv_state = jnp.moveaxis(pad[:, L : L + W - 1, :], 1, 2)  # (B, C, W-1)
+    state = SSMState(conv=conv_state.astype(x.dtype), ssm=final)
+    return out, state
+
+
+def ssm_decode(p, x, cfg: ArchConfig, state: SSMState):
+    """One-token recurrent step. x: (B, 1, d)."""
+    B = x.shape[0]
+    di, G, N, H, P = (
+        cfg.d_inner,
+        cfg.ssm_groups,
+        cfg.ssm_state,
+        cfg.ssm_heads,
+        cfg.ssm_headdim,
+    )
+    zxbcdt = x[:, 0, :] @ p["in_proj"]  # (B, proj)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # rolling conv window
+    win = jnp.concatenate([state.conv, xBC[:, :, None]], axis=2)  # (B, C, W)
+    # win[..., -1] is the newest input and pairs with conv_w[:, 0]
+    conv_out = jnp.einsum(
+        "bcw,cw->bc", win.astype(jnp.float32), p["conv_w"].astype(jnp.float32)[:, ::-1]
+    )
+    xBC_a = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xs = xBC_a[..., :di].reshape(B, H, P)
+    Bm = xBC_a[..., di : di + G * N].reshape(B, G, N)
+    Cm = xBC_a[..., di + G * N :].reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)  # (B, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])  # (B, H)
+    upd = (dt[:, :, None] * xs.astype(jnp.float32))[:, :, :, None] * Bh.astype(jnp.float32)[:, :, None, :]
+    ssm = state.ssm * dA[:, :, None, None] + upd  # (B, H, P, N)
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, Ch.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, SSMState(conv=win[:, :, 1:].astype(x.dtype), ssm=ssm)
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype) -> SSMState:
+    return SSMState(
+        conv=jnp.zeros((batch, conv_dim(cfg), cfg.conv_width - 1), dtype),
+        ssm=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    )

@@ -1,0 +1,151 @@
+"""Three-term roofline analysis over the compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell, from results/dryrun/*.json (produced by
+repro.launch.dryrun with the loop-aware HLO walker):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective term = collective_bytes_per_device / ICI_link_bw
+
+(the per-device numbers come from the SPMD-partitioned module, so dividing
+by per-chip peaks is the same as the global/(chips*peak) formulation).
+
+Hardware constants (assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_arch
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_dev: float
+    hlo_flops_dev: float
+    hbm_bytes_dev: float
+    coll_bytes_dev: float
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops_dev / max(self.hlo_flops_dev, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_term / bound: what fraction of the step's lower-bound time
+        is spent at the compute roof (1.0 = perfectly compute-bound)."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+    def advice(self) -> str:
+        if self.dominant == "memory":
+            return (
+                "memory-bound: cut HBM traffic (fuse/keep attention scores & "
+                "SSD intra-chunk tensors in VMEM via Pallas kernels; fewer "
+                "fusion-boundary materializations)"
+            )
+        if self.dominant == "collective":
+            return (
+                "collective-bound: reshard to reduce all-gather/reduce volume "
+                "(fsdp gather granularity, TP axis choice) or overlap with "
+                "compute"
+            )
+        if self.useful_ratio < 0.45:
+            return (
+                "compute-bound but low useful ratio: reduce recompute (remat "
+                "policy) and masked-out causal work (block-sparse schedule)"
+            )
+        return "compute-bound: near the MXU roof; remaining headroom is remat policy"
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    N = cfg.active_params()
+    if shape.kind == "train":
+        total = 6.0 * N * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        total = 2.0 * N * shape.global_batch * shape.seq_len
+    else:  # decode: one token per sequence
+        total = 2.0 * N * shape.global_batch
+    return total / n_devices
+
+
+def load_rows(dryrun_dir: str = "results/dryrun") -> list[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        d = json.load(open(path))
+        n = d["n_devices"]
+        rows.append(
+            RooflineRow(
+                arch=d["arch"],
+                shape=d["shape"],
+                mesh=d["mesh"],
+                n_devices=n,
+                compute_s=d["flops"] / PEAK_FLOPS,
+                memory_s=d["hbm_bytes"] / HBM_BW,
+                collective_s=d["collectives"]["_total_bytes"] / ICI_BW,
+                model_flops_dev=model_flops_per_device(d["arch"], d["shape"], n),
+                hlo_flops_dev=d["flops"],
+                hbm_bytes_dev=d["hbm_bytes"],
+                coll_bytes_dev=d["collectives"]["_total_bytes"],
+            )
+        )
+    return rows
+
+
+def markdown_table(rows: list[RooflineRow]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL/HLO flops | roofline frac | what would move it |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | **{r.dominant}** | "
+            f"{r.useful_ratio:.2f} | {r.roofline_fraction:.2f} | {r.advice()} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def pick_hillclimb_cells(rows: list[RooflineRow]) -> dict:
+    """worst roofline fraction, most collective-bound, most representative of
+    the paper's technique (the biggest fused-MoE training cell). Trivial
+    cells (bound < 10 ms, launch-overhead territory) are excluded from the
+    'worst fraction' pick."""
+    single = [r for r in rows if r.mesh == "16x16"]
+    heavy = [r for r in single if r.bound_s >= 0.01] or single
+    worst = min(heavy, key=lambda r: r.roofline_fraction)
+    coll = max(single, key=lambda r: r.collective_s / max(r.bound_s, 1e-30))
+    moe = [r for r in single if get_arch(r.arch).n_experts and r.shape == "train_4k"]
+    rep = max(moe, key=lambda r: r.hlo_flops_dev) if moe else single[0]
+    return {"worst_fraction": worst, "most_collective": coll, "paper_representative": rep}

@@ -1,0 +1,47 @@
+"""Re-run the loop-aware HLO cost walk over cached dry-run HLO artifacts and
+refresh the dryrun JSONs in place — iterating on the traffic/cost model
+without recompiling 66 cells.
+
+  PYTHONPATH=src python -m repro.roofline.reanalyze [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard
+
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    for jpath in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        tag = os.path.basename(jpath)[: -len(".json")]
+        hpath = os.path.join(args.dir, "hlo", tag + ".hlo.zst")
+        if not os.path.exists(hpath):
+            print(f"[skip] no HLO for {tag}")
+            continue
+        text = zstandard.decompress(open(hpath, "rb").read()).decode()
+        walk = analyze_hlo(text)
+        d = json.load(open(jpath))
+        d["flops"] = walk.flops
+        d["dot_flops"] = walk.dot_flops
+        d["vector_ops"] = walk.vector_ops
+        d["transcendentals"] = walk.transcendentals
+        d["hbm_bytes"] = walk.hbm_bytes
+        d["collectives"] = {**walk.collectives, "_total_bytes": walk.collective_bytes}
+        d["unknown_ops"] = walk.unknown_ops
+        with open(jpath, "w") as f:
+            json.dump(d, f, indent=2, default=str)
+        print(f"[ok] {tag}: flops={walk.flops:.3e} hbm={walk.hbm_bytes:.3e} "
+              f"coll={walk.collective_bytes:.3e}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

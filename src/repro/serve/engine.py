@@ -1,0 +1,224 @@
+"""Serving engine: batched prefill + decode with a KV cache, request queue
+and sampler — the inference-side driver (the paper's subject is inference
+performance, so the end-to-end example serves batched requests).
+
+Single-process implementation with the same structure a multi-host server
+uses: admission by batch, one prefill per admitted batch (right-padded to the
+batch max), then lock-step decode with per-sequence stop handling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models.transformer as T
+from repro.configs.base import ArchConfig
+from repro.models.registry import build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new: int = 16
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    tokens: list
+    prefill_s: float
+    decode_s: float
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params=None, seed: int = 0, max_batch: int = 8):
+        self.cfg = cfg
+        self.api = build_model(cfg)
+        self.params = params if params is not None else self.api.init(jax.random.PRNGKey(seed))
+        self.max_batch = max_batch
+        self.queue: list[Request] = []
+        self._decode = jax.jit(self.api.decode, donate_argnums=(1,))
+        self._prefill = jax.jit(self.api.prefill)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _pad_batch(self, prompts: list[np.ndarray]):
+        B = len(prompts)
+        L = max(len(p) for p in prompts)
+        toks = np.zeros((B, L), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, L - len(p):] = p  # left-pad so last token aligns
+            lens[i] = len(p)
+        return jnp.asarray(toks), jnp.asarray(lens), L
+
+    def _extra_inputs(self, B: int, key):
+        extra = {}
+        if self.cfg.family == "audio":
+            extra["frames"] = 0.1 * jax.random.normal(
+                key, (B, self.cfg.enc_frames, self.cfg.d_model)
+            ).astype(self.cfg.compute_dtype)
+        if self.cfg.family == "vlm":
+            extra["image_embeds"] = 0.1 * jax.random.normal(
+                key, (B, self.cfg.n_img_tokens, self.cfg.d_model)
+            ).astype(self.cfg.compute_dtype)
+        return extra
+
+    def step_batch(self) -> list[Result]:
+        """Admit up to max_batch requests, serve them to completion."""
+        if not self.queue:
+            return []
+        batch_reqs = self.queue[: self.max_batch]
+        self.queue = self.queue[self.max_batch :]
+        B = len(batch_reqs)
+        toks, lens, L = self._pad_batch([r.prompt for r in batch_reqs])
+        max_new = max(r.max_new for r in batch_reqs)
+
+        t0 = time.perf_counter()
+        batch = {"tokens": toks, **self._extra_inputs(B, jax.random.PRNGKey(1))}
+        logits, caches = self._prefill(self.params, batch)
+        caches = T.pad_cache(caches, self.cfg, L + max_new)
+        jax.block_until_ready(logits)
+        prefill_s = time.perf_counter() - t0
+
+        key = jax.random.PRNGKey(17)
+        outputs: list[list[int]] = [[] for _ in range(B)]
+        t0 = time.perf_counter()
+        cur = self._sample(logits, batch_reqs, key)
+        for i in range(B):
+            outputs[i].append(int(cur[i]))
+        for step in range(max_new - 1):
+            pos = jnp.full((B,), L + step, jnp.int32)
+            logits, caches = self._decode(self.params, caches, cur, pos)
+            key, sub = jax.random.split(key)
+            cur = self._sample(logits, batch_reqs, sub)
+            for i in range(B):
+                if len(outputs[i]) < batch_reqs[i].max_new:
+                    outputs[i].append(int(cur[i]))
+        jax.block_until_ready(cur)
+        decode_s = time.perf_counter() - t0
+        return [
+            Result(r.rid, outputs[i], prefill_s, decode_s)
+            for i, r in enumerate(batch_reqs)
+        ]
+
+    def _sample(self, logits, reqs, key):
+        logits = logits[:, : self.cfg.vocab_size]
+        temps = jnp.asarray([r.temperature for r in reqs])[:, None]
+        greedy = jnp.argmax(logits, axis=-1)
+        sampled = jax.random.categorical(key, logits / jnp.maximum(temps, 1e-3))
+        return jnp.where(temps[:, 0] > 0, sampled, greedy).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0  # next write position (absolute, excl. meta)
+    emitted: Optional[list] = None
+    cur: int = 0  # last sampled token
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ContinuousBatchingEngine:
+    """In-flight batching: a fixed pool of decode slots steps in lock-step;
+    finished requests free their slot and waiting requests are admitted at
+    the next step boundary (each admission prefills into its slot's region
+    of the shared KV cache). This is the vLLM/Orca-style scheduler shape on
+    top of the same pjit-able decode step.
+
+    Implementation notes for the single-process reference: the shared cache
+    is (B_slots, max_len, ...); per-slot prefill recomputes the prompt with
+    the slot's row batched alone and writes its KV into the slot row
+    (dynamic_update_slice), so running requests are never interrupted.
+    """
+
+    def __init__(self, cfg: ArchConfig, *, slots: int = 4, max_len: int = 128,
+                 params=None, seed: int = 0):
+        assert cfg.family not in ("ssm", "hybrid", "audio", "vlm"), (
+            "reference continuous-batching engine supports KV-cache LMs"
+        )
+        self.cfg = cfg
+        self.api = build_model(cfg)
+        self.params = params if params is not None else self.api.init(jax.random.PRNGKey(seed))
+        self.max_len = max_len
+        self.slots = [_Slot() for _ in range(slots)]
+        self.caches = self.api.init_cache(slots, max_len)
+        self.queue: list[Request] = []
+        self.done: list[Result] = []
+        self._decode = jax.jit(self.api.decode, donate_argnums=(1,))
+        self._prefill = jax.jit(self.api.prefill)
+        self._key = jax.random.PRNGKey(seed + 1)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if not slot.free or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            L = len(req.prompt)
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+            logits, cache1 = self._prefill(self.params, batch)
+            cache1 = T.pad_cache(cache1, self.cfg, self.max_len)
+            # copy this request's KV rows into slot i of the shared cache
+            # (supported families' cache leaves are (n_layers, B, S, H, D):
+            # the slot axis is always 1)
+            self.caches = jax.tree.map(
+                lambda full, one: full.at[:, i].set(one[:, 0]),
+                self.caches,
+                cache1,
+            )
+            self._key, sub = jax.random.split(self._key)
+            tok = self._sample_one(logits[0], req, sub)
+            slot.req, slot.pos, slot.emitted, slot.cur = req, L, [tok], tok
+
+    def _sample_one(self, logits, req, key) -> int:
+        logits = logits[: self.cfg.vocab_size]
+        if req.temperature > 0:
+            return int(jax.random.categorical(key, logits / req.temperature))
+        return int(jnp.argmax(logits))
+
+    def step(self):
+        """One scheduler tick: admit, decode all active slots, retire."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if not s.free]
+        if not active:
+            return False
+        toks = jnp.asarray([s.cur if not s.free else 0 for s in self.slots], jnp.int32)
+        pos = jnp.asarray(
+            [min(s.pos, self.max_len - 1) for s in self.slots], jnp.int32
+        )
+        logits, self.caches = self._decode(self.params, self.caches, toks, pos)
+        for i in active:
+            s = self.slots[i]
+            self._key, sub = jax.random.split(self._key)
+            tok = self._sample_one(logits[i], s.req, sub)
+            s.emitted.append(tok)
+            s.pos += 1
+            s.cur = tok
+            if len(s.emitted) >= s.req.max_new or s.pos >= self.max_len - 1:
+                self.done.append(Result(s.req.rid, s.emitted, 0.0, 0.0))
+                self.slots[i] = _Slot()
+        return True
+
+    def run_to_completion(self) -> list[Result]:
+        while self.queue or any(not s.free for s in self.slots):
+            self.step()
+        out, self.done = self.done, []
+        return out
+
+

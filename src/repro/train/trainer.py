@@ -1,0 +1,138 @@
+"""Training loop with production concerns:
+
+  * checkpoint/restart: periodic atomic checkpoints, auto-resume from the
+    latest one (preemption-safe — see tests/test_fault_tolerance.py for the
+    kill/restart bitwise-continuation check);
+  * data-iterator state is implicit (deterministic batch_at(step)), so resume
+    needs only the step number;
+  * straggler watchdog: logs steps slower than ``watchdog_factor`` x the
+    running median (on real multi-host deployments this hooks the
+    per-host heartbeat instead);
+  * elastic restart: checkpoints hold full arrays; ``Trainer.restore`` puts
+    them onto whatever mesh/shardings the new incarnation uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import signal
+import statistics
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamW
+from repro.train.step import TrainConfig, init_train_state, make_optimizer, make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    async_save: bool = False
+    watchdog_factor: float = 3.0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        data_cfg: DataConfig,
+        tc: TrainConfig,
+        trainer_cfg: TrainerConfig,
+        mesh=None,
+        state_shardings=None,
+        batch_shardings=None,
+    ):
+        self.cfg = cfg
+        self.api = build_model(cfg)
+        self.tc = tc
+        self.tcfg = trainer_cfg
+        self.data = SyntheticLM(cfg, data_cfg)
+        self.optimizer = make_optimizer(tc)
+        self.ckpt = CheckpointManager(
+            trainer_cfg.ckpt_dir, keep=trainer_cfg.keep, async_save=trainer_cfg.async_save
+        )
+        step_fn = make_train_step(self.api, self.optimizer, tc)
+        if mesh is not None:
+            self.train_step = jax.jit(
+                step_fn,
+                in_shardings=(state_shardings, batch_shardings),
+                out_shardings=(state_shardings, None),
+                donate_argnums=(0,),
+            )
+        else:
+            self.train_step = jax.jit(step_fn, donate_argnums=(0,))
+        self.state_shardings = state_shardings
+        self._preempted = False
+        self.step_times: list[float] = []
+        self.metrics_history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self, seed: int = 0):
+        state = init_train_state(self.api, self.optimizer, jax.random.PRNGKey(seed))
+        restored = self.ckpt.restore_latest(state, self.state_shardings)
+        if restored is not None:
+            step, state, extra = restored
+            log.info("resumed from checkpoint step %d", step)
+            return int(step), state
+        return 0, state
+
+    def request_preemption(self, *_args):
+        self._preempted = True
+
+    # ------------------------------------------------------------------
+    def run(self, seed: int = 0, preempt_after: Optional[int] = None):
+        """Returns (final_step, state, losses). ``preempt_after`` simulates a
+        preemption notice after N steps (tests/fault-tolerance drills)."""
+        start, state = self.init_or_restore(seed)
+        signal.signal(signal.SIGUSR1, self.request_preemption)
+        losses = []
+        for step in range(start, self.tcfg.total_steps):
+            batch = jax.tree.map(jax.numpy.asarray, self.data.batch_at(step))
+            t0 = time.perf_counter()
+            state, metrics = self.train_step(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._watchdog(step, dt)
+            losses.append(loss)
+            self.metrics_history.append({k: float(v) for k, v in metrics.items()})
+            if (step + 1) % self.tcfg.log_every == 0:
+                log.info("step %d loss %.4f (%.2fs)", step + 1, loss, dt)
+            if (step + 1) % self.tcfg.ckpt_every == 0 or step + 1 == self.tcfg.total_steps:
+                self.ckpt.save(step + 1, state, extra={"loss": loss})
+            if preempt_after is not None and step + 1 - start >= preempt_after:
+                self._preempted = True
+            if self._preempted:
+                self.ckpt.save(step + 1, state, extra={"loss": loss, "preempted": True})
+                self.ckpt.wait()
+                log.warning("preempted at step %d; checkpoint saved", step + 1)
+                return step + 1, state, losses
+        self.ckpt.wait()
+        return self.tcfg.total_steps, state, losses
+
+    # ------------------------------------------------------------------
+    def _watchdog(self, step: int, dt: float):
+        self.step_times.append(dt)
+        if len(self.step_times) >= 8:
+            med = statistics.median(self.step_times[-50:])
+            if dt > self.tcfg.watchdog_factor * med:
+                log.warning(
+                    "straggler: step %d took %.2fs (median %.2fs) — "
+                    "on a real cluster this triggers host health checks",
+                    step,
+                    dt,
+                    med,
+                )

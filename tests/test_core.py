@@ -1,0 +1,195 @@
+"""PipeWeave core unit + property tests: decomposer invariants, scheduler
+partition laws, feature monotonicity, oracle sanity, estimator round-trip."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hwsim
+from repro.core.dataset import featurize, sample_workload
+from repro.core.decomposer import (
+    SCHED_POLICY,
+    decompose,
+    gemm_tile_heuristic,
+    routing_counts,
+)
+from repro.core.features import PIPES, analyze
+from repro.core.hardware import REGISTRY, get_hw, seen_hw, unseen_hw
+from repro.core.scheduler import schedule, schedule_static, schedule_workqueue
+
+HW = get_hw("tpu-v5e")
+
+
+# ----------------------------------------------------------------------
+# decomposer invariants (property-based)
+# ----------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    M=st.integers(1, 8192),
+    N=st.sampled_from([128, 384, 1024, 4096]),
+    K=st.sampled_from([128, 256, 2048]),
+)
+def test_gemm_decomposition_conserves_work(M, N, K):
+    """Sum of per-task MXU ops == 2*M*N*K regardless of tiling."""
+    tasks = decompose("gemm", {"M": M, "N": N, "K": K}, HW)
+    assert np.isclose(tasks.mxu.sum(), 2.0 * M * N * K, rtol=1e-9)
+    assert (tasks.align > 0).all() and (tasks.align <= 1).all()
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    qlen=st.integers(1, 4096),
+    extra=st.integers(0, 4096),
+    bs=st.integers(1, 4),
+    nkv=st.integers(1, 4),
+    group=st.integers(1, 4),
+)
+def test_attention_causal_work_is_half_of_full(qlen, extra, bs, nkv, group):
+    """Causal total ops equal the exact masked sum (paper Eq. 3, alpha=4)."""
+    kvlen = qlen + extra
+    X = dict(bs=bs, nkv=nkv, group=group, hd=64, qlen=qlen, kvlen=kvlen)
+    full = decompose("attention", {**X, "causal": 0}, HW)
+    causal = decompose("attention", {**X, "causal": 1}, HW)
+    assert causal.mxu.sum() <= full.mxu.sum() + 1e-6
+    # exact: sum over rows of (offset + i + 1) kv positions
+    offset = kvlen - qlen
+    exact = sum(min(kvlen, offset + i + 1) for i in range(qlen))
+    exact_ops = 4.0 * group * exact * 64 * bs * nkv
+    # block-level counting rounds kv_eff up to the block edge
+    assert causal.mxu.sum() >= exact_ops - 1e-6
+    blocked = causal.mxu.sum()
+    assert blocked <= exact_ops * 2.0 + 1e-6
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    M=st.integers(8, 4096),
+    E=st.sampled_from([8, 16, 64]),
+    topk=st.integers(1, 8),
+    skew=st.floats(0.0, 0.7),
+    seed=st.integers(0, 10_000),
+)
+def test_moe_routing_counts_conserve_tokens(M, E, topk, skew, seed):
+    counts = routing_counts(M, E, topk, skew, seed)
+    assert counts.sum() == M * topk
+    assert (counts >= 0).all()
+
+
+# ----------------------------------------------------------------------
+# scheduler laws
+# ----------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(M=st.integers(1, 2048), N=st.sampled_from([384, 4096]))
+def test_static_schedule_is_partition(M, N):
+    tasks = decompose("gemm", {"M": M, "N": N, "K": 512}, HW)
+    chip_of = schedule_static(tasks, HW)
+    assert len(chip_of) == len(tasks)
+    counts = np.bincount(chip_of, minlength=HW.num_chips)
+    assert counts.max() - counts.min() <= 1  # round-robin balance
+
+
+def test_workqueue_beats_static_on_skewed_moe():
+    """The work-queue scheduler should balance ragged expert loads better
+    than a static split (the FA3/fused-MoE scheduling story)."""
+    X = {"M": 2048, "E": 16, "topk": 4, "H": 1024, "N": 1024, "skew": 0.65, "seed": 3}
+    tasks = decompose("fused_moe", X, HW)
+    from repro.core.scheduler import task_weights
+
+    w = task_weights(tasks, HW)
+    for sched in (schedule_static, schedule_workqueue):
+        chip_of = sched(tasks, HW)
+        loads = np.bincount(chip_of, weights=w, minlength=HW.num_chips)
+        if sched is schedule_static:
+            static_max = loads.max()
+        else:
+            wq_max = loads.max()
+    assert wq_max <= static_max + 1e-9
+
+
+# ----------------------------------------------------------------------
+# features + oracle
+# ----------------------------------------------------------------------
+
+
+def test_feature_vector_shape_and_finite():
+    from repro.core.features import FEATURE_DIM
+
+    for kind in ("gemm", "attention", "rmsnorm", "silu_mul", "scaled_mm", "fused_moe"):
+        rng = np.random.default_rng(0)
+        w = sample_workload(kind, rng)
+        fs = featurize(kind, w, HW)
+        v = fs.vector(HW)
+        assert v.shape == (FEATURE_DIM,), (kind, v.shape)
+        assert np.all(np.isfinite(v))
+
+
+def test_oracle_never_beats_theoretical():
+    """hwsim latency >= dominant-pipe theoretical time (roofline is a true
+    lower bound modulo the 3% noise)."""
+    rng = np.random.default_rng(1)
+    for kind in ("gemm", "attention", "fused_moe", "rmsnorm"):
+        for _ in range(10):
+            w = sample_workload(kind, rng)
+            for hw in (get_hw("tpu-v5e"), get_hw("tpu-v4"), get_hw("tpu-v7p")):
+                fs = featurize(kind, w, hw)
+                actual = hwsim.simulate(kind, w, hw)
+                assert actual >= fs.theoretical_s * 0.9, (kind, w, hw.name)
+
+
+def test_oracle_monotone_in_gemm_size():
+    base = {"M": 1024, "N": 1024, "K": 1024}
+    bigger = {"M": 4096, "N": 1024, "K": 1024}
+    assert hwsim.simulate("gemm", bigger, HW) > hwsim.simulate("gemm", base, HW)
+
+
+def test_comm_oracle_scales_with_bytes():
+    t1 = hwsim.simulate_comm("all_reduce", 1e6, 8, HW)
+    t2 = hwsim.simulate_comm("all_reduce", 1e8, 8, HW)
+    assert t2 > t1 > 0
+
+
+def test_hw_registry_split():
+    assert len(REGISTRY) == 11
+    assert len(seen_hw()) == 6 and len(unseen_hw()) == 5
+
+
+# ----------------------------------------------------------------------
+# estimator quick round-trip (small budget)
+# ----------------------------------------------------------------------
+
+
+def test_estimator_learns_gemm_quickly():
+    from repro.core.dataset import SEEN, build_dataset, mape
+    from repro.core.estimator import train_pipeweave
+
+    ds = build_dataset("gemm", n_workloads=110, seed=5)
+    pw = train_pipeweave({"gemm": ds}, max_epochs=250)
+    pred = pw.predict_dataset(ds)
+    seen = np.array([h in SEEN for h in ds.hw_names])
+    m = mape(pred[seen], ds.actual_s[seen])
+    roofline = mape(ds.theoretical_s[seen], ds.actual_s[seen])
+    assert m < roofline, (m, roofline)
+    assert m < 20.0, m
+
+
+def test_quantile_ceiling_above_median_eff():
+    from repro.core.dataset import build_dataset
+    from repro.core.quantile import perf_gap, train_ceiling
+
+    ds = build_dataset("fused_moe", n_workloads=50, seed=6)
+    ceiling = train_ceiling(ds, max_epochs=200)
+    report = perf_gap(ceiling, ds)
+    # ceiling should sit above actual efficiency for most points
+    frac_above = float((report.gaps > -0.05).mean())
+    assert frac_above > 0.6, frac_above
+
+
+def test_tuner_improves_underperformers():
+    from repro.core.tuner import tune_one
+
+    X = {"M": 512, "E": 64, "topk": 2, "H": 2048, "N": 1024, "skew": 0.5, "seed": 9}
+    r = tune_one(X, get_hw("tpu-v4"))
+    assert r.speedup >= 1.0

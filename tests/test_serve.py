@@ -1,0 +1,49 @@
+"""Serving engine integration tests (reduced configs on CPU)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.serve.engine import Request, ServeEngine
+
+
+def _engine(arch="qwen3-0.6b", **kw):
+    return ServeEngine(get_arch(arch).smoke(), **kw)
+
+
+def test_serves_batched_requests_to_completion():
+    eng = _engine(max_batch=3)
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        L = int(rng.integers(8, 24))
+        eng.submit(Request(rid=i, prompt=rng.integers(1, 200, L).astype(np.int32), max_new=4))
+    results = []
+    while eng.queue:
+        results += eng.step_batch()
+    assert sorted(r.rid for r in results) == [0, 1, 2, 3, 4]
+    for r in results:
+        assert len(r.tokens) == 4
+        assert all(0 <= t < eng.cfg.vocab_size for t in r.tokens)
+
+
+def test_greedy_is_deterministic():
+    outs = []
+    for _ in range(2):
+        eng = _engine(max_batch=2)
+        eng.submit(Request(rid=0, prompt=np.arange(1, 17, dtype=np.int32), max_new=5))
+        outs.append(eng.step_batch()[0].tokens)
+    assert outs[0] == outs[1]
+
+
+def test_temperature_sampling_runs():
+    eng = _engine(max_batch=1)
+    eng.submit(Request(rid=0, prompt=np.arange(1, 17, dtype=np.int32), max_new=5,
+                       temperature=1.0))
+    r = eng.step_batch()[0]
+    assert len(r.tokens) == 5
+
+
+def test_ssm_arch_serves():
+    eng = _engine("mamba2-370m", max_batch=2)
+    eng.submit(Request(rid=0, prompt=np.arange(1, 17, dtype=np.int32), max_new=3))
+    r = eng.step_batch()[0]
+    assert len(r.tokens) == 3

@@ -1,0 +1,187 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, trainer
+fault-tolerance (kill/restart continuation), gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.dist.collectives import ef_compress_grads
+from repro.optim.adamw import AdamW, constant_lr, global_norm, warmup_cosine
+from repro.train.step import TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# ----------------------------------------------------------------------
+# optimizer
+# ----------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    opt = AdamW(lr=constant_lr(0.1), weight_decay=0.0)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_adamw_clips_global_norm():
+    opt = AdamW(lr=constant_lr(0.0), clip_norm=1.0)
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    _, _, metrics = opt.update({"w": jnp.full((4, 4), 100.0)}, state, params)
+    assert float(metrics["grad_norm"]) > 100.0  # reported pre-clip
+
+
+def test_warmup_cosine_schedule_shape():
+    s = warmup_cosine(1e-3, warmup=10, total=100)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(s(100)) < float(s(50)) < float(s(10))
+
+
+def test_weight_decay_only_on_matrices():
+    opt = AdamW(lr=constant_lr(0.1), weight_decay=1.0, clip_norm=None)
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    state = opt.init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    new, _, _ = opt.update(zeros, state, params)
+    assert float(new["w"][0, 0]) < 1.0  # decayed
+    assert float(new["b"][0]) == 1.0  # not decayed
+
+
+# ----------------------------------------------------------------------
+# data pipeline
+# ----------------------------------------------------------------------
+
+
+def test_data_deterministic_per_step():
+    cfg = get_arch("qwen3-0.6b").smoke()
+    src = SyntheticLM(cfg, DataConfig(batch=4, seq_len=32, seed=7))
+    a = src.batch_at(12)
+    b = src.batch_at(12)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = src.batch_at(13)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_host_sharding_disjoint():
+    cfg = get_arch("qwen3-0.6b").smoke()
+    s0 = SyntheticLM(cfg, DataConfig(batch=8, seq_len=16, seed=1, process_index=0, process_count=2))
+    s1 = SyntheticLM(cfg, DataConfig(batch=8, seq_len=16, seed=1, process_index=1, process_count=2))
+    a, b = s0.batch_at(0), s1.batch_at(0)
+    assert a["tokens"].shape == (4, 16)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_tokens_in_vocab():
+    cfg = get_arch("gemma2-2b").smoke()
+    src = SyntheticLM(cfg, DataConfig(batch=2, seq_len=64))
+    t = src.batch_at(0)["tokens"]
+    assert t.min() >= 0 and t.max() < cfg.vocab_size
+
+
+# ----------------------------------------------------------------------
+# checkpointing
+# ----------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32), "b": {"c": jnp.ones(4)}}
+    mgr.save(3, state, extra={"loss": 1.5})
+    mgr.save(6, state)
+    mgr.save(9, state)
+    assert mgr.steps() == [6, 9]  # keep=2 retention
+    restored = mgr.restore_latest(state)
+    assert restored is not None
+    step, new_state, _ = restored
+    assert step == 9
+    np.testing.assert_array_equal(np.asarray(new_state["a"]), np.asarray(state["a"]))
+
+
+def test_checkpoint_atomicity_no_partial(tmp_path):
+    """tmp dirs never count as checkpoints."""
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(tmp_path / "tmp.5.123", exist_ok=True)
+    assert mgr.latest_step() is None
+
+
+# ----------------------------------------------------------------------
+# trainer fault tolerance: preemption + restart == uninterrupted run
+# ----------------------------------------------------------------------
+
+
+def _mk_trainer(tmp_path, total_steps):
+    cfg = get_arch("qwen3-0.6b").smoke()
+    data = DataConfig(batch=4, seq_len=32, seed=0)
+    tc = TrainConfig(lr=1e-3, warmup=2, total_steps=total_steps)
+    tcfg = TrainerConfig(
+        total_steps=total_steps, ckpt_every=4, ckpt_dir=str(tmp_path), keep=2, log_every=100
+    )
+    return Trainer(cfg, data, tc, tcfg)
+
+
+def test_preempt_restart_bitwise_continuation(tmp_path):
+    # uninterrupted run
+    t_full = _mk_trainer(tmp_path / "full", 8)
+    _, state_full, losses_full = t_full.run(seed=0)
+    # preempted at step 4 then restarted
+    t_a = _mk_trainer(tmp_path / "pre", 8)
+    step_a, _, losses_a = t_a.run(seed=0, preempt_after=4)
+    assert step_a == 4
+    t_b = _mk_trainer(tmp_path / "pre", 8)
+    step_b, state_resumed, losses_b = t_b.run(seed=0)
+    assert step_b == 8
+    np.testing.assert_allclose(losses_a + losses_b, losses_full, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(state_full["params"]), jax.tree.leaves(state_resumed["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_training_reduces_loss(tmp_path):
+    t = _mk_trainer(tmp_path, 30)
+    _, _, losses = t.run(seed=1)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+
+
+# ----------------------------------------------------------------------
+# gradient compression
+# ----------------------------------------------------------------------
+
+
+def test_ef_compression_bias_vanishes():
+    """Error feedback: accumulated compressed updates converge to the true
+    gradient sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    err = None
+    acc = jnp.zeros_like(g_true)
+    for _ in range(50):
+        deq, err = ef_compress_grads({"g": g_true}, err)
+        acc = acc + deq["g"]
+    avg = acc / 50
+    np.testing.assert_allclose(np.asarray(avg), np.asarray(g_true), atol=2e-2)
+
+
+def test_ef_compression_quantizes_to_int8_levels():
+    g = {"g": jnp.linspace(-1, 1, 256).astype(jnp.float32)}
+    deq, err = ef_compress_grads(g, None)
+    levels = np.unique(np.round(np.asarray(deq["g"]) / (1.0 / 127.0)).astype(int))
+    assert len(levels) <= 255
+
+
+def test_straggler_watchdog_logs(caplog):
+    import logging
+
+    t = _mk_trainer("/tmp/unused_watchdog", 1)
+    with caplog.at_level(logging.WARNING, logger="repro.train"):
+        for i in range(10):
+            t._watchdog(i, 0.1)
+        t._watchdog(10, 1.0)  # 10x the median -> straggler
+    assert any("straggler" in r.message for r in caplog.records)
