@@ -1,0 +1,4 @@
+"""SynPerf reproduction: hybrid analytical-ML GPU performance prediction
+on a production-shaped JAX/Pallas training + serving stack."""
+
+__version__ = "0.1.0"

@@ -92,9 +92,17 @@ class TrainedMLP:
     y_floor: float = 1e-3  # sigmoid-collapse guard: no training row was
     # below this efficiency, so predictions aren't allowed to be either
     # (latency = theo/eff amplifies eff underestimates unboundedly)
+    # normalized-space training envelope: unseen-hardware rows can land 3x
+    # outside the training z-range, saturating BatchNorm+sigmoid and
+    # collapsing predictions to the floor — clip inference inputs to the
+    # envelope (no-op for in-distribution rows)
+    x_lo: Optional[np.ndarray] = None
+    x_hi: Optional[np.ndarray] = None
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         Xn = (X - self.mu_x) / self.sd_x
+        if self.x_lo is not None:
+            Xn = np.clip(Xn, self.x_lo, self.x_hi)
         out = _eval_forward(self.params, self.state, jnp.asarray(Xn, jnp.float32))
         return np.clip(np.asarray(out), self.y_floor, 1.0)
 
@@ -176,4 +184,7 @@ def fit_mlp(
                 break
     _, params, state = best
     floor = float(max(np.min(y) * 0.5, 1e-3))
-    return TrainedMLP(params=params, state=state, mu_x=mu_x, sd_x=sd_x, y_floor=floor)
+    return TrainedMLP(
+        params=params, state=state, mu_x=mu_x, sd_x=sd_x, y_floor=floor,
+        x_lo=np.asarray(Xn[tr_idx].min(0)), x_hi=np.asarray(Xn[tr_idx].max(0)),
+    )

@@ -1,0 +1,1 @@
+"""Data pipelines: deterministic synthetic LM batches with host sharding."""

@@ -1,0 +1,34 @@
+"""Distribution substrate: sharding rules, compression collectives, pipeline.
+
+Split by concern:
+  * :mod:`repro.dist.sharding` — role-based PartitionSpec resolution and the
+    ambient-mesh ``constrain`` used throughout the model code;
+  * :mod:`repro.dist.collectives` — int8 error-feedback gradient compression;
+  * :mod:`repro.dist.pipeline` — GPipe pipeline parallelism via shard_map.
+"""
+from repro.dist.collectives import ef_compress_grads
+from repro.dist.pipeline import pipeline_bubble_fraction, pipeline_forward
+from repro.dist.sharding import (
+    active_mesh,
+    batch_pspecs,
+    cache_pspecs,
+    constrain,
+    param_pspecs,
+    resolve_pspec,
+    to_named,
+    use_mesh,
+)
+
+__all__ = [
+    "active_mesh",
+    "batch_pspecs",
+    "cache_pspecs",
+    "constrain",
+    "ef_compress_grads",
+    "param_pspecs",
+    "pipeline_bubble_fraction",
+    "pipeline_forward",
+    "resolve_pspec",
+    "to_named",
+    "use_mesh",
+]

@@ -1,0 +1,63 @@
+"""Communication-compression collectives.
+
+int8 error-feedback (EF) gradient compression: each step quantizes
+``grad + carried_error`` to int8 with a per-leaf absmax scale, and carries
+the quantization residual into the next step. The residual feedback makes
+the scheme unbiased in the limit — the accumulated compressed updates
+converge to the true gradient sum (1-bit Adam / EF-SGD lineage), which is
+what licenses shipping 4x fewer bytes through data-parallel all-reduces.
+
+On a real multi-host deployment the int8 payload (``q``, ``scale``) is what
+crosses the network; here compress -> dequantize runs inside the jitted step
+so the numerics (and the bytes accounted by the dry-run HLO pass) are
+faithful while the transport stays XLA's own all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_compress_grads", "int8_quantize", "int8_dequantize"]
+
+_LEVELS = 127.0  # symmetric int8: q in [-127, 127]
+
+
+def int8_quantize(x) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric absmax quantization. Returns (q_int8, scale)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x)) / _LEVELS
+    q = jnp.clip(jnp.round(x / jnp.where(scale > 0, scale, 1.0)), -_LEVELS, _LEVELS)
+    return q.astype(jnp.int8), scale
+
+
+def int8_dequantize(q, scale) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads: Any, err: Optional[Any]) -> Tuple[Any, Any]:
+    """Error-feedback int8 compression over a gradient pytree.
+
+    ``err`` is the carried residual tree (None on the first step — allocated
+    as zeros here, which is why the train state stores ``err: None`` until
+    compression actually runs). Returns ``(dequantized_grads, new_err)``
+    with both trees matching the structure of ``grads``.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if err is None:
+        err_leaves = [jnp.zeros(g.shape, jnp.float32) for g in leaves]
+    else:
+        err_leaves = treedef.flatten_up_to(err)
+
+    deq_leaves, new_err_leaves = [], []
+    for g, e in zip(leaves, err_leaves):
+        target = g.astype(jnp.float32) + e
+        q, scale = int8_quantize(target)
+        deq = int8_dequantize(q, scale)
+        deq_leaves.append(deq)
+        new_err_leaves.append(target - deq)
+    return (
+        jax.tree_util.tree_unflatten(treedef, deq_leaves),
+        jax.tree_util.tree_unflatten(treedef, new_err_leaves),
+    )

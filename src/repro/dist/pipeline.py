@@ -1,0 +1,96 @@
+"""GPipe-style pipeline parallelism via ``shard_map`` + collective permutes.
+
+The layer stack (leaves stacked along a leading layer dim, the same layout
+``Segment.init`` produces) is split into ``n_stages`` contiguous stages, one
+per device along the pipeline mesh axis. Microbatches stream through the
+stages: at every tick each stage applies its local layers to the microbatch
+it holds, then ``ppermute`` shifts activations one stage down the ring.
+Stage 0 ingests a fresh microbatch per tick; the last stage emits a finished
+one. With M microbatches and S stages the schedule runs M + S - 1 ticks, a
+bubble fraction of (S - 1) / (M + S - 1) — the quantity the analytical
+decomposer models for cross-pipeline workloads.
+
+Numerics match a sequential ``lax.scan`` over the full stack exactly: each
+microbatch sees the same layer order and the same per-microbatch operand
+shapes, only interleaved in time across devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["pipeline_forward", "pipeline_bubble_fraction"]
+
+
+def pipeline_bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """Idle fraction of the GPipe schedule (fill + drain)."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_forward(layer_fn: Callable, params: Any, x, mesh, axis: Optional[str] = None):
+    """Run a stacked layer pytree as a GPipe pipeline over ``mesh``.
+
+    Args:
+      layer_fn: ``(layer_params, h) -> h`` for a single layer; applied to
+        per-microbatch activations, so ``h`` has shape ``x.shape[1:]``.
+      params: pytree whose leaves are stacked ``(n_layers, ...)``; n_layers
+        must be divisible by the pipeline axis size.
+      x: ``(n_micro, *per_microbatch_shape)`` microbatched inputs.
+      mesh: mesh containing the pipeline axis (defaults to its first axis).
+
+    Returns ``(n_micro, *per_microbatch_shape)`` outputs, replicated across
+    the pipeline axis — equal to scanning every layer over each microbatch.
+    """
+    axis = axis or mesh.axis_names[0]
+    n_stages = mesh.shape[axis]
+    n_layers = jax.tree.leaves(params)[0].shape[0]
+    if n_layers % n_stages != 0:
+        raise ValueError(f"{n_layers} layers not divisible into {n_stages} stages")
+    n_micro = x.shape[0]
+    ring = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def stage_fn(stage_params, x_all):
+        stage = lax.axis_index(axis)
+
+        def apply_stage(h):
+            def body(c, lp):
+                return layer_fn(lp, c), None
+
+            h, _ = lax.scan(body, h, stage_params)
+            return h
+
+        def tick(carry, t):
+            state, outputs = carry
+            # stage 0 ingests microbatch t while the schedule is filling
+            inp = lax.dynamic_index_in_dim(x_all, jnp.clip(t, 0, n_micro - 1), keepdims=False)
+            h = jnp.where(jnp.logical_and(stage == 0, t < n_micro), inp, state)
+            y = apply_stage(h)
+            # the last stage finishes microbatch t - (S - 1) at tick t
+            idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            cur = lax.dynamic_index_in_dim(outputs, idx, keepdims=False)
+            take = jnp.logical_and(stage == n_stages - 1, t >= n_stages - 1)
+            outputs = lax.dynamic_update_index_in_dim(
+                outputs, jnp.where(take, y, cur), idx, 0
+            )
+            state = lax.ppermute(y, axis, ring)
+            return (state, outputs), None
+
+        init = (jnp.zeros_like(x_all[0]), jnp.zeros_like(x_all))
+        (_, outputs), _ = lax.scan(tick, init, jnp.arange(n_micro + n_stages - 1))
+        # only the last stage holds real outputs; psum broadcasts them so the
+        # result is replicated (out_specs P() below)
+        return lax.psum(jnp.where(stage == n_stages - 1, outputs, 0.0), axis)
+
+    pspecs = jax.tree.map(lambda _: P(axis), params)
+    return shard_map(
+        stage_fn,
+        mesh=mesh,
+        in_specs=(pspecs, P()),
+        out_specs=P(),
+        check_rep=False,  # ppermute-carried state is intentionally unreplicated
+    )(params, x)

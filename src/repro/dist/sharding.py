@@ -1,0 +1,273 @@
+"""Sharding rule engine: axis *roles* -> mesh axes -> PartitionSpecs.
+
+Model code never names mesh axes directly. It annotates tensors with logical
+roles (``"batch"``, ``"tp"``, ``"fsdp"``, ``"experts"``) and this module maps
+roles onto whatever mesh is active, with a greedy divisibility fallback:
+
+  * a role whose candidate mesh axes are absent from the mesh replicates;
+  * a dim that a candidate axis does not divide evenly replicates (odd head
+    counts like hymba's 25 on a 16-way model axis, batch=1, etc.);
+  * ``"batch"`` may span several axes jointly — on the multi-pod production
+    mesh it greedily takes the longest prefix of ``("pod", "data")`` whose
+    product still divides the batch dim;
+  * a mesh axis is consumed at most once per spec (an expert-parallel dim
+    claiming ``"model"`` blocks a later ``"tp"`` dim from reusing it).
+
+The same engine resolves parameter trees (:func:`param_pspecs`), input
+batches (:func:`batch_pspecs`) and KV/SSM cache trees (:func:`cache_pspecs`),
+so the training step, the serving engine and the dry-run lowering all agree
+on one source of truth for the distribution strategy.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "resolve_pspec",
+    "param_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+    "to_named",
+    "use_mesh",
+    "active_mesh",
+    "constrain",
+]
+
+
+# ----------------------------------------------------------------------
+# role -> mesh-axis candidates
+# ----------------------------------------------------------------------
+
+# Order matters for multi-axis roles: "batch" takes the longest divisible
+# prefix, so pods are the outermost data-parallel dimension.
+_ROLE_AXES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "experts": ("model",),
+    "pipe": ("pipe",),
+}
+
+
+def _mesh_sizes(mesh) -> dict[str, int]:
+    # Mesh and AbstractMesh both expose .shape as an axis-name -> size mapping.
+    return dict(mesh.shape)
+
+
+def resolve_pspec(shape: Sequence[int], axis_roles: Sequence[Optional[str]], mesh) -> P:
+    """Resolve one tensor's axis roles into a PartitionSpec on ``mesh``.
+
+    ``axis_roles`` has one entry per dim: a role name or None (replicate).
+    Always returns a spec that is valid to shard ``shape`` with — anything
+    that doesn't divide falls back to replication for that dim.
+    """
+    if len(shape) != len(axis_roles):
+        raise ValueError(f"shape {tuple(shape)} vs roles {tuple(axis_roles)}")
+    sizes = _mesh_sizes(mesh)
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, role in zip(shape, axis_roles):
+        if role is None or role not in _ROLE_AXES:
+            entries.append(None)
+            continue
+        picked: list[str] = []
+        prod = 1
+        for ax in _ROLE_AXES[role]:
+            if ax not in sizes or ax in used:
+                continue
+            if dim % (prod * sizes[ax]) != 0:
+                break  # greedy prefix: stop at the first non-dividing axis
+            picked.append(ax)
+            prod *= sizes[ax]
+        if not picked:
+            entries.append(None)
+        else:
+            used.update(picked)
+            entries.append(picked[0] if len(picked) == 1 else tuple(picked))
+    return P(*entries)
+
+
+# ----------------------------------------------------------------------
+# active-mesh context
+# ----------------------------------------------------------------------
+
+_local = threading.local()
+
+
+def active_mesh():
+    """The innermost mesh entered via :func:`use_mesh`, or None."""
+    stack = getattr(_local, "mesh_stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Make ``mesh`` the ambient mesh for :func:`constrain` inside traces."""
+    stack = getattr(_local, "mesh_stack", None)
+    if stack is None:
+        stack = _local.mesh_stack = []
+    stack.append(mesh)
+    try:
+        yield mesh
+    finally:
+        stack.pop()
+
+
+def constrain(x, axis_roles: Sequence[Optional[str]]):
+    """``with_sharding_constraint`` against the active mesh; no-op without one.
+
+    Safe to call unconditionally from model code: on a single device (or when
+    no ``use_mesh`` context is active at trace time) it returns ``x``.
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_pspec(x.shape, axis_roles, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------------
+# tree mappers
+# ----------------------------------------------------------------------
+
+# Trailing-dim roles per parameter leaf name. Leaves carry a variable number
+# of leading stack dims (lax.scan layer stacking; vlm groups stack twice) —
+# rules describe only the logical trailing dims and pad left with None.
+_PARAM_RULES: dict[str, tuple] = {
+    # embeddings / positional tables
+    "tok": ("tp", "fsdp"),
+    "head": ("fsdp", "tp"),
+    "meta": (None, "fsdp"),
+    "enc_pos": (None, "fsdp"),
+    "dec_pos": (None, "fsdp"),
+    # attention projections (column-parallel in, row-parallel out)
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    # FFN (SwiGLU)
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    "router": ("fsdp", None),
+    # SSM mixers
+    "in_proj": ("fsdp", "tp"),
+    "out_proj": ("tp", "fsdp"),
+    "conv_w": ("fsdp", None),
+}
+
+# Expert-parallel variants: the stacked (E, d, f) weights shard experts on
+# the model axis; the hidden dim must then stay unsharded (axis reuse).
+_MOE_PARAM_RULES: dict[str, tuple] = {
+    "w_gate": ("experts", "fsdp", None),
+    "w_up": ("experts", "fsdp", None),
+    "w_down": ("experts", None, "fsdp"),
+}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            out.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            out.append(str(entry.name))
+    return out
+
+
+def _pad_roles(roles: tuple, ndim: int) -> Optional[tuple]:
+    if ndim < len(roles):
+        return None
+    return (None,) * (ndim - len(roles)) + tuple(roles)
+
+
+def _param_roles(path, ndim: int) -> tuple:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    in_moe = "moe" in names[:-1] and "dense" not in names[:-1]
+    if in_moe and name in _MOE_PARAM_RULES:
+        roles = _pad_roles(_MOE_PARAM_RULES[name], ndim)
+        if roles is not None:
+            return roles
+    if name in _PARAM_RULES:
+        roles = _pad_roles(_PARAM_RULES[name], ndim)
+        if roles is not None:
+            return roles
+    # generic fallback: matrices get megatron-ish (fsdp, tp) on the trailing
+    # two dims; vectors/scalars (norm scales, gates, A_log, ...) replicate
+    if ndim >= 2:
+        return (None,) * (ndim - 2) + ("fsdp", "tp")
+    return (None,) * ndim
+
+
+def param_pspecs(params, mesh):
+    """Map every parameter leaf (arrays or ShapeDtypeStructs) to a
+    PartitionSpec. Structure-preserving, so the result plugs straight into
+    ``jax.jit`` in/out shardings and ``device_put``."""
+
+    def one(path, leaf):
+        return resolve_pspec(leaf.shape, _param_roles(path, len(leaf.shape)), mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_pspecs(batch, mesh):
+    """Input batches shard their leading (batch) dim; everything else
+    replicates. Works for token batches and modality frontends alike."""
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return resolve_pspec(leaf.shape, ("batch",) + (None,) * (nd - 1), mesh)
+
+    return jax.tree.map(one, batch)
+
+
+# Cache leaves are stacked along a leading layer dim; roles are anchored on
+# the trailing dims by leaf name.
+_CACHE_RULES: dict[str, tuple] = {
+    # (..., B, S, H_kv, hd): batch + head sharding, never the seq dim
+    "k": ("batch", None, "tp", None),
+    "v": ("batch", None, "tp", None),
+    "ck": ("batch", None, "tp", None),
+    "cv": ("batch", None, "tp", None),
+    # (..., B, conv_dim, W)
+    "conv": ("batch", None, None),
+    # (..., B, H, hd, N)
+    "ssm": ("batch", "tp", None, None),
+}
+
+
+def cache_pspecs(caches, mesh):
+    """PartitionSpecs for prefill/decode cache trees (KV + SSM states)."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        roles = _pad_roles(_CACHE_RULES.get(name, ()), len(leaf.shape)) if name in _CACHE_RULES else None
+        if roles is None:
+            roles = (None,) * len(leaf.shape)
+        return resolve_pspec(leaf.shape, roles, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def to_named(specs, mesh):
+    """Replace every PartitionSpec leaf with a NamedSharding on ``mesh``.
+
+    Non-spec leaves (None placeholders like the lazy error-feedback buffer)
+    pass through untouched.
+    """
+    if isinstance(specs, P):
+        return NamedSharding(mesh, specs)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas TPU compiler params across jax versions: the class is
+    ``pltpu.CompilerParams`` on jax >= 0.5 and ``pltpu.TPUCompilerParams``
+    on jax 0.4.x (same keyword surface for what we use)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

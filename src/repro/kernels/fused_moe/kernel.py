@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _moe_kernel(
     x_ref,  # (1, block_m, D)
@@ -87,7 +89,7 @@ def fused_moe_pallas(
         out_specs=pl.BlockSpec((1, block_m, D), lambda e, im, jf: (e, im, 0)),
         out_shape=jax.ShapeDtypeStruct((E, C, D), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

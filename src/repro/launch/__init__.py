@@ -1,0 +1,1 @@
+"""Entry points: training/serving launchers, mesh construction, dry-run lowering."""

@@ -38,8 +38,13 @@ from repro.dist.sharding import (
 )
 from repro.launch.mesh import make_production_mesh
 from repro.models.registry import build_model, input_specs
-from repro.optim.adamw import AdamWState
-from repro.train.step import TrainConfig, init_train_state, make_optimizer, make_train_step
+from repro.train.step import (
+    TrainConfig,
+    init_train_state,
+    make_optimizer,
+    make_train_step,
+    train_state_pspecs,
+)
 
 
 # ----------------------------------------------------------------------
@@ -109,16 +114,7 @@ def collective_bytes(hlo_text: str) -> dict:
 
 
 def state_pspecs(state_shapes, mesh):
-    return {
-        "params": param_pspecs(state_shapes["params"], mesh),
-        "opt": AdamWState(
-            step=P(),
-            mu=param_pspecs(state_shapes["opt"].mu, mesh),
-            nu=param_pspecs(state_shapes["opt"].nu, mesh),
-        ),
-        "step": P(),
-        "err": None,
-    }
+    return train_state_pspecs(state_shapes, mesh)
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool):
@@ -139,7 +135,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
             tc = TrainConfig()
             optimizer = make_optimizer(tc)
             state_shapes = jax.eval_shape(
-                lambda: init_train_state(api, optimizer, jax.random.PRNGKey(0))
+                lambda: init_train_state(
+                    api, optimizer, jax.random.PRNGKey(0),
+                    compress_grads=tc.compress_grads,
+                )
             )
             s_spec = state_pspecs(state_shapes, mesh)
             s_sh = to_named(s_spec, mesh)
@@ -201,6 +200,8 @@ def analyze(lowered, compiled, meta) -> dict:
     from repro.roofline.hlo_cost import analyze_hlo
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # jax 0.4.x returns a one-element list
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_d = {

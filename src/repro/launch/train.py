@@ -39,9 +39,13 @@ def main():
 
     from repro.configs import get_arch
     from repro.data.pipeline import DataConfig
-    from repro.dist.sharding import batch_pspecs, param_pspecs, to_named, use_mesh
-    from repro.optim.adamw import AdamWState
-    from repro.train.step import TrainConfig, init_train_state, make_optimizer
+    from repro.dist.sharding import batch_pspecs, to_named, use_mesh
+    from repro.train.step import (
+        TrainConfig,
+        init_train_state,
+        make_optimizer,
+        train_state_pspecs,
+    )
     from repro.train.trainer import Trainer, TrainerConfig
 
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
@@ -71,24 +75,17 @@ def main():
 
     if mesh is not None:
         with use_mesh(mesh):
-            from jax.sharding import PartitionSpec as P
             from repro.models.registry import build_model
 
             api = build_model(cfg)
             optimizer = make_optimizer(tc)
             state_shapes = jax.eval_shape(
-                lambda: init_train_state(api, optimizer, jax.random.PRNGKey(0))
+                lambda: init_train_state(
+                    api, optimizer, jax.random.PRNGKey(0),
+                    compress_grads=tc.compress_grads,
+                )
             )
-            state_sh = {
-                "params": to_named(param_pspecs(state_shapes["params"], mesh), mesh),
-                "opt": AdamWState(
-                    step=to_named(P(), mesh),
-                    mu=to_named(param_pspecs(state_shapes["opt"].mu, mesh), mesh),
-                    nu=to_named(param_pspecs(state_shapes["opt"].nu, mesh), mesh),
-                ),
-                "step": to_named(P(), mesh),
-                "err": None,
-            }
+            state_sh = to_named(train_state_pspecs(state_shapes, mesh), mesh)
             from repro.models.registry import batch_specs
 
             batch_sh = to_named(

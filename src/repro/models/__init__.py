@@ -1,0 +1,1 @@
+"""Model zoo: segmented transformer/SSM/MoE stacks and the public ModelApi."""

@@ -1,0 +1,1 @@
+"""Optimizers: pure-JAX AdamW with schedules and global-norm clipping."""

@@ -1,0 +1,1 @@
+"""Roofline analysis: HLO cost walking and performance reports."""

@@ -56,7 +56,9 @@ _FREE = {
     "opt-barrier", "domain",
 }
 
-_TUPLE_SPLIT = re.compile(r",\s*(?![^\[\(]*[\]\)])")
+# split on commas outside [], () and {} — operand annotations can carry
+# explicit layouts (f32[2,512,32]{2,1,0}) whose inner commas must not split
+_TUPLE_SPLIT = re.compile(r",\s*(?![^\[\({]*[\]\)}])")
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 _COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
 _INSTR = re.compile(

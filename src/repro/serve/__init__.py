@@ -1,0 +1,1 @@
+"""Serving engine: continuous batching over prefill/decode steps."""

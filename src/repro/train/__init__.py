@@ -1,0 +1,1 @@
+"""Training substrate: pjit train step and the fault-tolerant Trainer loop."""

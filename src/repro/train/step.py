@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.dist.collectives import ef_compress_grads
 from repro.dist.sharding import constrain
 from repro.models.registry import ModelApi
 from repro.optim.adamw import AdamW, AdamWState
@@ -38,13 +39,47 @@ def make_optimizer(tc: TrainConfig) -> AdamW:
     )
 
 
-def init_train_state(api: ModelApi, optimizer: AdamW, key) -> dict:
+def init_train_state(
+    api: ModelApi, optimizer: AdamW, key, compress_grads: bool = False
+) -> dict:
     params = api.init(key)
+    # the error-feedback buffer is allocated eagerly when compressing so the
+    # state pytree structure is stable across steps — a lazily-appearing err
+    # subtree changes the donated-buffer aliasing of the jitted step
+    err = (
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if compress_grads
+        else None
+    )
     return {
         "params": params,
         "opt": optimizer.init(params),
         "step": jnp.zeros((), jnp.int32),
-        "err": None,  # error-feedback buffer, allocated lazily when compressing
+        "err": err,
+    }
+
+
+def train_state_pspecs(state_shapes: dict, mesh) -> dict:
+    """PartitionSpecs for a full train-state tree (params, optimizer moments,
+    error-feedback buffer). The single source of truth for launchers and the
+    dry-run — the err subtree mirrors the params whenever it exists."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import param_pspecs
+
+    return {
+        "params": param_pspecs(state_shapes["params"], mesh),
+        "opt": AdamWState(
+            step=P(),
+            mu=param_pspecs(state_shapes["opt"].mu, mesh),
+            nu=param_pspecs(state_shapes["opt"].nu, mesh),
+        ),
+        "step": P(),
+        "err": (
+            param_pspecs(state_shapes["err"], mesh)
+            if state_shapes["err"] is not None
+            else None
+        ),
     }
 
 
@@ -85,8 +120,6 @@ def make_train_step(api: ModelApi, optimizer: AdamW, tc: TrainConfig):
         loss, metrics, grads = compute_grads(state["params"], batch)
         err = state.get("err")
         if tc.compress_grads:
-            from repro.dist.collectives import ef_compress_grads
-
             grads, err = ef_compress_grads(grads, err)
         new_params, new_opt, opt_metrics = optimizer.update(
             grads, state["opt"], state["params"]

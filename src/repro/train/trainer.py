@@ -82,7 +82,10 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def init_or_restore(self, seed: int = 0):
-        state = init_train_state(self.api, self.optimizer, jax.random.PRNGKey(seed))
+        state = init_train_state(
+            self.api, self.optimizer, jax.random.PRNGKey(seed),
+            compress_grads=self.tc.compress_grads,
+        )
         restored = self.ckpt.restore_latest(state, self.state_shardings)
         if restored is not None:
             step, state, extra = restored

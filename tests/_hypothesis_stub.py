@@ -1,0 +1,114 @@
+"""Minimal deterministic stand-in for `hypothesis`.
+
+Loaded by tests/conftest.py ONLY when the real package is absent (this
+container bakes the jax toolchain but not hypothesis, and installing
+dependencies is out of scope). It implements just the surface the test
+suite uses — ``@settings(deadline=..., max_examples=N)``, ``@given(**kw)``
+and the ``integers`` / ``sampled_from`` / ``floats`` / ``booleans``
+strategies — drawing a fixed per-test number of examples from a seeded RNG,
+with boundary values tried first. No shrinking, no example database; when
+real hypothesis is installed it takes precedence automatically.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+from typing import Any, Callable, Sequence
+
+__version__ = "0.0-stub"
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy draws example i of a run: boundary cases first, then a
+    seeded-random sweep (deterministic across runs)."""
+
+    def __init__(self, edges: Sequence[Any], draw: Callable[[random.Random], Any]):
+        self._edges = list(edges)
+        self._draw = draw
+
+    def example(self, i: int, rng: random.Random):
+        if i < len(self._edges):
+            return self._edges[i]
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        [min_value, max_value], lambda rng: rng.randint(min_value, max_value)
+    )
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> _Strategy:
+    return _Strategy(
+        [min_value, max_value], lambda rng: rng.uniform(min_value, max_value)
+    )
+
+
+def booleans() -> _Strategy:
+    return _Strategy([False, True], lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(elements, lambda rng: elements[rng.randrange(len(elements))])
+
+
+def just(value) -> _Strategy:
+    return _Strategy([value], lambda rng: value)
+
+
+def given(*_args, **strats):
+    if _args:
+        raise NotImplementedError("stub @given supports keyword strategies only")
+
+    def decorate(f):
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{f.__module__}.{f.__qualname__}")
+            for i in range(n):
+                drawn = {k: s.example(i, rng) for k, s in strats.items()}
+                try:
+                    f(*args, **kwargs, **drawn)
+                except Exception as e:  # surface the failing example
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): {drawn!r}"
+                    ) from e
+
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=f)
+        # hide the drawn parameters from pytest's fixture resolution (real
+        # hypothesis does the same): drawn args are supplied here, not by
+        # fixtures, and no suite test mixes @given with fixtures/parametrize
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate
+
+
+def settings(deadline=None, max_examples=None, **_kw):
+    def decorate(f):
+        if max_examples is not None:
+            f._stub_max_examples = max_examples
+        return f
+
+    return decorate
+
+
+def assume(condition) -> bool:
+    # Real hypothesis retries on a failed assumption; the stub simply skips
+    # the example by raising nothing and letting callers guard themselves.
+    return bool(condition)
+
+
+strategies = types.SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    booleans=booleans,
+    sampled_from=sampled_from,
+    just=just,
+)

@@ -1,0 +1,79 @@
+"""Test-environment compatibility shims.
+
+1. `hypothesis` fallback: this container does not ship hypothesis and
+   installing packages is out of scope, so when the real package is missing
+   we register tests/_hypothesis_stub.py under its name before any test
+   module imports it. With hypothesis installed the stub never loads.
+
+2. `AbstractMesh` signature: the suite constructs abstract meshes with the
+   jax >= 0.5 two-argument form ``AbstractMesh(axis_sizes, axis_names)``;
+   jax 0.4.x expects a single tuple of (name, size) pairs. Wrap the class in
+   jax.sharding's namespace so both spellings work.
+"""
+import importlib.util
+import os
+import sys
+
+
+def _install_hypothesis_stub():
+    try:
+        import hypothesis  # noqa: F401
+
+        return
+    except ImportError:
+        pass
+    path = os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py")
+    spec = importlib.util.spec_from_file_location("hypothesis", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
+
+
+def _patch_abstract_mesh():
+    import jax.sharding as jsh
+
+    orig = jsh.AbstractMesh
+    try:
+        orig((1,), ("x",))
+        return  # modern signature already supported
+    except TypeError:
+        pass
+
+    def compat_abstract_mesh(axis_sizes, axis_names=None, **kw):
+        if axis_names is None:
+            return orig(axis_sizes, **kw)
+        return orig(tuple(zip(axis_names, axis_sizes)), **kw)
+
+    jsh.AbstractMesh = compat_abstract_mesh
+
+
+def _patch_cost_analysis():
+    import jax
+
+    compiled_cls = jax.stages.Compiled
+    orig = compiled_cls.cost_analysis
+
+    def probe_is_list():
+        # jax 0.4.x returns a one-element list of dicts; >= 0.5 returns the
+        # dict itself. Normalize to the dict the suite expects.
+        import jax.numpy as jnp
+
+        out = jax.jit(lambda x: x + 1).lower(jnp.zeros(())).compile().cost_analysis()
+        return isinstance(out, list)
+
+    if not probe_is_list():
+        return
+
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, list):
+            return out[0] if out else {}
+        return out
+
+    compiled_cls.cost_analysis = cost_analysis
+
+
+_install_hypothesis_stub()
+_patch_abstract_mesh()
+_patch_cost_analysis()

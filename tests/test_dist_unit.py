@@ -1,0 +1,201 @@
+"""Fast single-device unit tests for the distribution substrate — the cheap
+complement to test_dist.py's multi-device subprocess integration suite."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.collectives import ef_compress_grads, int8_dequantize, int8_quantize
+from repro.dist.pipeline import pipeline_bubble_fraction
+from repro.dist.sharding import (
+    active_mesh,
+    batch_pspecs,
+    cache_pspecs,
+    constrain,
+    param_pspecs,
+    resolve_pspec,
+    to_named,
+    use_mesh,
+)
+
+
+# ----------------------------------------------------------------------
+# resolve_pspec edge cases
+# ----------------------------------------------------------------------
+
+
+def _mesh(sizes, names):
+    # two-arg AbstractMesh; conftest normalizes the signature on jax 0.4.x
+    from jax.sharding import AbstractMesh
+
+    return AbstractMesh(sizes, names)
+
+
+def test_resolve_pspec_odd_head_counts_replicate():
+    mesh = _mesh((16, 16), ("data", "model"))
+    # hymba-style odd head counts on a 16-way model axis
+    for heads in (25, 7, 17, 31):
+        assert resolve_pspec((heads, 64), ("tp", None), mesh) == P(None, None)
+    # even-but-non-divisible also replicates
+    assert resolve_pspec((24, 64), ("tp", None), mesh) == P(None, None)
+    # divisible shards
+    assert resolve_pspec((32, 64), ("tp", None), mesh) == P("model", None)
+
+
+def test_resolve_pspec_multipod_greedy_batch_factoring():
+    mesh = _mesh((2, 16, 16), ("pod", "data", "model"))
+    # divisible by pod*data -> joint sharding
+    assert resolve_pspec((256, 8), ("batch", None), mesh) == P(("pod", "data"), None)
+    # divisible by pod only -> greedy keeps the prefix
+    assert resolve_pspec((2, 8), ("batch", None), mesh) in (P("pod", None), P(("pod",), None))
+    assert resolve_pspec((6, 8), ("batch", None), mesh) in (P("pod", None), P(("pod",), None))
+    # not even divisible by pod -> replicate
+    assert resolve_pspec((3, 8), ("batch", None), mesh) == P(None, None)
+    # odd batch of 1 (long-context decode) -> replicate
+    assert resolve_pspec((1, 8), ("batch", None), mesh) == P(None, None)
+
+
+def test_resolve_pspec_no_axis_reuse():
+    mesh = _mesh((2, 2), ("data", "model"))
+    # experts claims the model axis first; a later tp dim must not reuse it
+    spec = resolve_pspec((4, 64, 96), ("experts", "fsdp", "tp"), mesh)
+    assert spec == P("model", "data", None)
+
+
+def test_resolve_pspec_missing_axes_replicate():
+    mesh = _mesh((4,), ("pipe",))
+    assert resolve_pspec((8, 8), ("batch", "tp"), mesh) == P(None, None)
+
+
+def test_resolve_pspec_rank_mismatch_raises():
+    mesh = _mesh((2, 2), ("data", "model"))
+    with pytest.raises(ValueError):
+        resolve_pspec((4, 4), ("batch",), mesh)
+
+
+# ----------------------------------------------------------------------
+# tree mappers + mesh context
+# ----------------------------------------------------------------------
+
+
+def test_param_pspecs_moe_expert_dim_on_model_axis():
+    from repro.configs import get_arch
+    from repro.models.registry import build_model
+
+    cfg = get_arch("dbrx-132b").smoke()
+    api = build_model(cfg)
+    shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    mesh = _mesh((2, 2), ("data", "model"))
+    specs = param_pspecs(shapes, mesh)
+    moe_spec = specs["segments"][0]["moe"]["w_gate"]
+    # stacked (L, E, d, f): expert dim sharded on the model axis
+    assert moe_spec[1] == "model"
+
+
+def test_batch_pspecs_structure_and_batch_dim():
+    mesh = _mesh((2, 2), ("data", "model"))
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+        "frames": jax.ShapeDtypeStruct((4, 24, 64), jnp.float32),
+        "odd": jax.ShapeDtypeStruct((3, 5), jnp.float32),
+    }
+    specs = batch_pspecs(batch, mesh)
+    assert specs["tokens"] == P("data", None)
+    assert specs["frames"] == P("data", None, None)
+    assert specs["odd"] == P(None, None)  # 3 doesn't divide the data axis
+
+
+def test_cache_pspecs_kv_heads_on_model_axis():
+    mesh = _mesh((2, 2), ("data", "model"))
+    cache = {"k": jax.ShapeDtypeStruct((2, 4, 32, 2, 16), jnp.float32)}
+    assert cache_pspecs(cache, mesh)["k"] == P(None, "data", None, "model", None)
+
+
+def test_use_mesh_nesting_and_constrain_noop():
+    assert active_mesh() is None
+    x = jnp.ones((4, 8))
+    assert constrain(x, ("batch", None)) is x  # no mesh -> identity
+    m1 = jax.make_mesh((1,), ("data",))
+    with use_mesh(m1) as m:
+        assert active_mesh() is m1 and m is m1
+        with use_mesh(m1):
+            assert active_mesh() is m1
+        assert active_mesh() is m1
+    assert active_mesh() is None
+
+
+def test_to_named_wraps_specs_and_passes_none_through():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"a": P("data", None), "b": None, "c": {"d": P()}}
+    out = to_named(tree, mesh)
+    assert isinstance(out["a"], NamedSharding) and out["a"].spec == P("data", None)
+    assert out["b"] is None
+    assert isinstance(out["c"]["d"], NamedSharding)
+    assert isinstance(to_named(P(), mesh), NamedSharding)  # bare spec
+
+
+# ----------------------------------------------------------------------
+# int8 error-feedback compression
+# ----------------------------------------------------------------------
+
+
+def test_ef_compress_deterministic():
+    rng = np.random.default_rng(3)
+    g = {"w": jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)}
+    d1, e1 = ef_compress_grads(g, None)
+    d2, e2 = ef_compress_grads(g, None)
+    np.testing.assert_array_equal(np.asarray(d1["w"]), np.asarray(d2["w"]))
+    np.testing.assert_array_equal(np.asarray(e1["w"]), np.asarray(e2["w"]))
+
+
+def test_ef_compress_int8_levels_and_scale():
+    g = jnp.asarray(np.linspace(-2.0, 2.0, 1000), jnp.float32)
+    q, scale = int8_quantize(g)
+    assert q.dtype == jnp.int8
+    assert float(scale) == pytest.approx(2.0 / 127.0)
+    levels = np.unique(np.asarray(q))
+    assert levels.min() >= -127 and levels.max() <= 127
+    # dequantization error bounded by half a quantization step
+    err = np.abs(np.asarray(int8_dequantize(q, scale)) - np.asarray(g))
+    assert err.max() <= float(scale) / 2 + 1e-7
+
+
+def test_ef_compress_zero_grads_exact():
+    g = {"w": jnp.zeros((8, 8), jnp.float32)}
+    deq, err = ef_compress_grads(g, None)
+    np.testing.assert_array_equal(np.asarray(deq["w"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(err["w"]), 0.0)
+
+
+def test_ef_compress_residual_carries_between_steps():
+    g = {"w": jnp.full((4,), 0.501 * (1.0 / 127.0), jnp.float32)}
+    deq1, err1 = ef_compress_grads(g, None)
+    # residual is what quantization dropped
+    np.testing.assert_allclose(
+        np.asarray(err1["w"]),
+        np.asarray(g["w"]) - np.asarray(deq1["w"]),
+        rtol=1e-6,
+    )
+    # feeding the residual back changes the next quantization target
+    deq2, _ = ef_compress_grads(g, err1)
+    total = np.asarray(deq1["w"]) + np.asarray(deq2["w"])
+    np.testing.assert_allclose(total, 2 * np.asarray(g["w"]), atol=float(1 / 127.0))
+
+
+def test_ef_compress_jit_compatible():
+    g = {"w": jnp.ones((8,), jnp.float32)}
+    e = {"w": jnp.zeros((8,), jnp.float32)}
+    deq, err = jax.jit(ef_compress_grads)(g, e)
+    np.testing.assert_allclose(np.asarray(deq["w"]), 1.0, rtol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# pipeline accounting
+# ----------------------------------------------------------------------
+
+
+def test_pipeline_bubble_fraction():
+    assert pipeline_bubble_fraction(4, 4) == pytest.approx(3 / 7)
+    assert pipeline_bubble_fraction(1, 8) == 0.0
