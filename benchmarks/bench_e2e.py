@@ -3,15 +3,18 @@ models / parallelism / request mixes, PipeWeave vs baselines.
 
 Workload mixes mirror the paper's arxiv_* (avg input 2630) and splitwise_*
 (avg input 982) batches; models come from the assigned architecture registry
-(single-unit + TP=2/4/8 and TP=4&PP=2 configurations)."""
+(single-unit + TP=2/4/8 and TP=4&PP=2 configurations). Every estimator —
+PipeWeave and the four §VI baselines — runs through the same
+``repro.predict`` backend interface (one batched ``request_estimate`` per
+cell) against the oracle backend."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Csv, get_baseline, get_dataset, get_pipeweave
+from benchmarks.common import Csv, get_backend
 from repro.configs import get_arch
-from repro.core.dataset import SEEN, mape
-from repro.core.e2e import CommRegressor, oracle_times, request_latency
+from repro.core.dataset import SEEN
+from repro.core.e2e import request_estimate
 from repro.core.hardware import REGISTRY
 
 CONFIGS = [
@@ -33,66 +36,29 @@ MIXES = [
     ("splitwise_64", 64, 982, 150),
 ]
 
-
-def _kernel_time_from(predictor, ds_cache, hw):
-    def f(kind, X):
-        return predictor.predict_latency(kind, X, hw)
-
-    return f
-
-
-class _BaselineAdapter:
-    """Wrap a fitted kernel baseline into a predict_latency interface."""
-
-    def __init__(self, models: dict):
-        self.models = models
-
-    def predict_latency(self, kind, X, hw):
-        from repro.core.dataset import KernelDataset, featurize
-
-        fs = featurize(kind, X, hw)
-        ds = KernelDataset(
-            kind,
-            fs.vector(hw)[None],
-            np.array([1.0], np.float32),
-            np.array([fs.theoretical_s]),
-            np.array([fs.theoretical_s]),
-            [hw.name],
-            [X],
-        )
-        return float(self.models[kind].predict(ds)[0])
+BACKENDS = ("synperf", "roofline", "linear", "habitat", "neusight")
 
 
 def run(csv: Csv):
-    pw = get_pipeweave()
-    baselines = {
-        name: _BaselineAdapter({k: get_baseline(name, k) for k in
-                                ("gemm", "attention", "rmsnorm", "silu_mul", "fused_moe")})
-        for name in ("roofline", "linear", "habitat", "neusight")
-    }
-    comms: dict = {}
-    rows = {name: {"seen": [], "unseen": []} for name in ("pipeweave", *baselines)}
+    rows = {name: {"seen": [], "unseen": []} for name in BACKENDS}
 
     for arch, tp, pp, hw_names in CONFIGS:
         cfg = get_arch(arch)
         for mix_name, B, lin, lout in MIXES[:2] if cfg.n_params() > 5e10 else MIXES:
             for hw_name in hw_names:
                 hw = REGISTRY[hw_name]
-                if hw_name not in comms:
-                    comms[hw_name] = CommRegressor().fit(hw)
-                kt_o, ct_o = oracle_times(hw)
-                actual = request_latency(
-                    cfg, B, lin, lout, tp=tp, pp=pp, kernel_time=kt_o, comm_time=ct_o
-                )
+                oracle = get_backend("oracle", hw)
+                actual = request_estimate(
+                    cfg, B, lin, lout, tp=tp, pp=pp, predictor=oracle
+                ).total_s
                 split = "seen" if hw_name in SEEN else "unseen"
                 preds = {}
-                for name, predictor in (("pipeweave", pw), *baselines.items()):
-                    p = request_latency(
+                for name in BACKENDS:
+                    est = request_estimate(
                         cfg, B, lin, lout, tp=tp, pp=pp,
-                        kernel_time=lambda k, X, pr=predictor: pr.predict_latency(k, X, hw),
-                        comm_time=comms[hw_name].predict,
+                        predictor=get_backend(name, hw),
                     )
-                    err = abs(p - actual) / actual * 100
+                    err = abs(est.total_s - actual) / actual * 100
                     preds[name] = err
                     rows[name][split].append(err)
                 csv.add(
@@ -105,8 +71,8 @@ def run(csv: Csv):
         for split in ("seen", "unseen"):
             if d[split]:
                 csv.add(f"table9/avg_{split}/{name}", 0.0, f"{np.mean(d[split]):.1f}%")
-    ours = np.mean(rows["pipeweave"]["seen"] + rows["pipeweave"]["unseen"])
+    ours = np.mean(rows["synperf"]["seen"] + rows["synperf"]["unseen"])
     best = min(
-        np.mean(rows[b]["seen"] + rows[b]["unseen"]) for b in baselines
+        np.mean(rows[b]["seen"] + rows[b]["unseen"]) for b in BACKENDS if b != "synperf"
     )
     csv.add("table9/error_reduction_overall", 0.0, f"{best/max(ours,1e-9):.1f}x")

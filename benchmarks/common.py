@@ -11,6 +11,8 @@ import numpy as np
 
 from repro.core.dataset import KERNELS, build_dataset, mape
 from repro.core.estimator import PipeWeave, train_pipeweave
+from repro.core.hardware import TPUSpec
+from repro.predict import CommRegressor, FeatureCache, get_predictor
 
 CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "results/bench_cache")
 # dataset sizes tuned for the single-CPU-core container; the paper's full
@@ -42,7 +44,11 @@ def get_all_datasets():
 def get_pipeweave() -> PipeWeave:
     p = _path(f"pipeweave_{N_WORKLOADS}_{MAX_EPOCHS}.pkl")
     if os.path.exists(p):
-        return PipeWeave.load(p)
+        try:
+            return PipeWeave.load(p)
+        except RuntimeError as e:  # stale / pre-versioning cache: retrain
+            print(f"# discarding stale estimator cache: {e}")
+            os.remove(p)
     pw = train_pipeweave(get_all_datasets(), max_epochs=MAX_EPOCHS)
     pw.save(p)
     return pw
@@ -59,6 +65,49 @@ def get_baseline(name: str, kind: str):
     with open(p, "wb") as f:
         pickle.dump(b, f)
     return b
+
+
+_COMMS: dict = {}
+
+
+def get_comm(hw: TPUSpec) -> CommRegressor:
+    """Per-hardware fitted CommRegressor, memoized for the process."""
+    if hw.name not in _COMMS:
+        _COMMS[hw.name] = CommRegressor().fit(hw)
+    return _COMMS[hw.name]
+
+
+# baseline backends that wrap fitted per-family models; "roofline" is
+# analytic and needs none
+E2E_KERNELS = ("gemm", "attention", "rmsnorm", "silu_mul", "fused_moe")
+FITTED_BACKENDS = ("linear", "habitat", "neusight")
+
+
+_BACKENDS: dict = {}
+# FeatureCache keys on (kind, hw.name, workload), so one shared cache
+# serves every backend on every hardware
+_FEAT_CACHE = FeatureCache()
+
+
+def get_backend(name: str, hw: TPUSpec, **kw):
+    """A registered predictor backend wired to the cached fitted artifacts
+    (PipeWeave / per-family baselines / comm regressor). Instances are
+    memoized per (name, hw) and share one FeatureCache so repeated
+    benchmark cells never re-featurize a shape."""
+    key = (name, hw.name, tuple(sorted(kw.items())))
+    if key in _BACKENDS:
+        return _BACKENDS[key]
+    kw.setdefault("comm", get_comm(hw))
+    kw.setdefault("cache", _FEAT_CACHE)
+    if name == "synperf":
+        backend = get_predictor(name, hw, estimator=get_pipeweave(), **kw)
+    elif name in FITTED_BACKENDS:
+        models = {k: get_baseline(name, k) for k in E2E_KERNELS}
+        backend = get_predictor(name, hw, models=models, **kw)
+    else:
+        backend = get_predictor(name, hw, **kw)
+    _BACKENDS[key] = backend
+    return backend
 
 
 class Csv:

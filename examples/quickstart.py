@@ -2,21 +2,29 @@
 
 1. decompose a kernel into tasks, schedule it, inspect pipeline demands;
 2. train a small estimator and predict latency on unseen hardware;
-3. predict an end-to-end serving step for one of the assigned architectures.
+3. predict an end-to-end serving request through the unified
+   ``repro.predict`` API: one batched ``request_estimate`` per backend,
+   with per-family breakdown, the analytical ceiling, and an *explicit*
+   fallback for kernel families the estimator was not trained on (here we
+   only train the gemm family, so everything else is visibly served by the
+   oracle — nothing falls back silently).
 
-Run: PYTHONPATH=src python examples/quickstart.py
+Run: PYTHONPATH=src python examples/quickstart.py [--n-workloads 120]
 """
+import argparse
+
 import numpy as np
 
 from repro.core import hwsim
 from repro.core.dataset import build_dataset, featurize, mape, SEEN, UNSEEN
-from repro.core.e2e import CommRegressor, oracle_times, request_latency
+from repro.core.e2e import request_estimate
 from repro.core.estimator import train_pipeweave
 from repro.core.hardware import get_hw
 from repro.configs import get_arch
+from repro.predict import get_predictor
 
 
-def main():
+def main(n_workloads: int = 120, max_epochs: int = 250):
     hw_seen = get_hw("tpu-v5e")
     hw_unseen = get_hw("tpu-v6e")
 
@@ -32,8 +40,8 @@ def main():
 
     # --- 2. train a small estimator -------------------------------------
     print("\n== training a small per-kernel MLP (gemm) ==")
-    ds = build_dataset("gemm", n_workloads=120, seed=0)
-    pw = train_pipeweave({"gemm": ds})
+    ds = build_dataset("gemm", n_workloads=n_workloads, seed=0)
+    pw = train_pipeweave({"gemm": ds}, max_epochs=max_epochs)
     pred = pw.predict_dataset(ds)
     seen = np.array([h in SEEN for h in ds.hw_names])
     print(f"  MAPE seen={mape(pred[seen], ds.actual_s[seen]):.1f}%  "
@@ -45,18 +53,27 @@ def main():
     # --- 3. end-to-end request prediction --------------------------------
     print("\n== E2E: qwen3-0.6b, batch 8, 982-token prompts, 64 new tokens ==")
     cfg = get_arch("qwen3-0.6b")
-    comm = CommRegressor().fit(hw_seen)
-    kt, ct = oracle_times(hw_seen)
-    actual = request_latency(cfg, 8, 982, 64, tp=1, kernel_time=kt, comm_time=ct)
-    predicted = request_latency(
-        cfg, 8, 982, 64, tp=1,
-        kernel_time=lambda k, X: pw.predict_latency(k, X, hw_seen)
-        if k in pw.models else hwsim.simulate(k, X, hw_seen),
-        comm_time=comm.predict,
-    )
-    print(f"  oracle={actual*1e3:.1f}ms  predicted={predicted*1e3:.1f}ms  "
-          f"err={abs(predicted-actual)/actual*100:.1f}%")
+    oracle = get_predictor("oracle", hw_seen)
+    actual = request_estimate(cfg, 8, 982, 64, tp=1, predictor=oracle)
+    # the estimator only knows gemm here; fallback="oracle" substitutes the
+    # hwsim oracle for the untrained families and records it in the
+    # Estimate (the default fallback="error" would raise instead). The comm
+    # half (a CommRegressor) is auto-fitted lazily on the first CommCall.
+    predictor = get_predictor("synperf", hw_seen, estimator=pw, fallback="oracle")
+    est = request_estimate(cfg, 8, 982, 64, tp=1, predictor=predictor)
+    print(f"  oracle={actual.total_s*1e3:.1f}ms  predicted={est.total_s*1e3:.1f}ms  "
+          f"err={abs(est.total_s-actual.total_s)/actual.total_s*100:.1f}%")
+    print(f"  analytical ceiling: {est.theoretical_s*1e3:.1f}ms")
+    print("  per-family breakdown: "
+          + "  ".join(f"{f}={t*1e3:.1f}ms" for f, t in
+                      sorted(est.by_family.items(), key=lambda kv: -kv[1])))
+    print(f"  families served by fallback: {est.fallbacks or 'none'}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-workloads", type=int, default=120,
+                    help="dataset size for the demo estimator (CI uses a small value)")
+    ap.add_argument("--max-epochs", type=int, default=250)
+    args = ap.parse_args()
+    main(n_workloads=args.n_workloads, max_epochs=args.max_epochs)

@@ -3,10 +3,12 @@
 The Workload Generator lowers an ArchConfig + request shape + parallelism
 into the kernel-invocation sequence a serving engine would issue (sequential
 kernel execution, no overlap — the paper's stated assumption), plus the
-collective calls of TP/EP/PP. Kernel latencies come from a pluggable
-predictor (PipeWeave / baselines); communication from a data-driven
-regressor fitted on profiled collectives. The oracle E2E time sums hwsim
-kernel times + simulated comm — the "measured serving latency" analogue.
+collective calls of TP/EP/PP. Latency estimation is delegated to a
+``repro.predict`` backend: ``request_estimate(cfg, ..., predictor=p)``
+returns an ``Estimate`` with the total plus per-family/per-op breakdown and
+the analytical ceiling; ``step_time``/``request_latency`` are the scalar
+views. The legacy ``kernel_time``/``comm_time`` two-lambda kwargs are kept
+as a deprecation shim (wrapped in ``CallableTimesPredictor``).
 
 Modeling conventions (documented deviations):
   * one REGISTRY slice = one accelerator unit (the paper's "GPU"); TP/PP
@@ -23,29 +25,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
-
-import numpy as np
+from typing import Callable, Optional
 
 from repro.configs.base import ArchConfig
 from repro.core import hwsim
-from repro.core.dataset import featurize
 from repro.core.hardware import TPUSpec
 
-
-@dataclasses.dataclass
-class KernelCall:
-    kind: str
-    X: dict
-    count: int = 1
-
-
-@dataclasses.dataclass
-class CommCall:
-    op: str
-    nbytes: float
-    n_units: int
-    count: int = 1
+# call types + comm regressor live in the predict layer now; re-exported
+# here for backward compatibility with pre-ISSUE-2 imports
+from repro.predict.api import CommCall, Estimate, KernelCall  # noqa: F401
+from repro.predict.backends import CallableTimesPredictor, get_predictor
+from repro.predict.comm import CommRegressor  # noqa: F401
 
 
 def _gemm(M, N, K, count=1):
@@ -171,12 +161,14 @@ def model_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list
     calls = []
     per_layer = layer_calls(cfg, B, qlen, kvlen, tp)
     calls.append(("layers", cfg.n_layers, per_layer))
+    # LM head over every position: B*qlen tokens in prefill, B in decode
+    head_tokens = B * qlen if qlen > 1 else B
     head = [
         KernelCall("rmsnorm", {"seq": B * qlen, "dim": cfg.d_model}),
-        _gemm(B if qlen == 1 else B, cfg.padded_vocab // tp, cfg.d_model),
+        _gemm(head_tokens, cfg.padded_vocab // tp, cfg.d_model),
     ]
     if tp > 1:
-        head.append(CommCall("all_gather", B * cfg.padded_vocab // tp * 4.0, tp))
+        head.append(CommCall("all_gather", head_tokens * cfg.padded_vocab // tp * 4.0, tp))
     calls.append(("head", 1, head))
     if cfg.family == "audio":
         enc = layer_calls(
@@ -186,46 +178,30 @@ def model_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list
     return calls
 
 
-# ----------------------------------------------------------------------
-# communication regressor (paper: RF on profiled comm database; here a
-# log-log regression per op fitted on profiled simulate_comm samples)
-# ----------------------------------------------------------------------
-
-
-class CommRegressor:
-    """Profiled-collective database + regression (paper §V-D): per (op,
-    participant-count) bucket, fit latency = alpha + beta*bytes on profiled
-    samples — the standard alpha-beta structure."""
-
-    def __init__(self):
-        self.theta: dict = {}
-
-    _NS = (2, 4, 8, 16)
-
-    def fit(self, hw: TPUSpec, seed: int = 0):
-        rng = np.random.default_rng(seed)
-        for op in ("all_reduce", "all_gather", "reduce_scatter", "p2p"):
-            for n in self._NS:
-                rows, ys = [], []
-                for _ in range(60):
-                    nbytes = float(np.exp(rng.uniform(np.log(1e3), np.log(1e9))))
-                    t = hwsim.simulate_comm(op, nbytes, n, hw)
-                    rows.append([1.0, nbytes])
-                    ys.append(t)
-                A = np.asarray(rows)
-                y = np.asarray(ys)
-                # weight by 1/t: minimize *relative* error so the alpha
-                # (latency) regime isn't drowned out by GB-sized samples
-                Aw = A / y[:, None]
-                self.theta[(op, n)], *_ = np.linalg.lstsq(Aw, np.ones_like(y), rcond=None)
-        return self
-
-    def predict(self, op: str, nbytes: float, n: int) -> float:
-        if n <= 1 or nbytes <= 0:
-            return 0.0
-        nb = min(self._NS, key=lambda x: abs(math.log(x) - math.log(max(n, 2))))
-        a, b = self.theta[(op, nb)]
-        return float(max(a + b * nbytes, 1e-7))
+def request_calls(
+    cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1
+) -> list:
+    """The full request's call sequence: prefill + Simpson-weighted decode
+    samples (3 cache lengths integrate the growing KV) + PP stage-boundary
+    activations. One batched ``Predictor.predict`` over this sequence
+    replaces 4 ``step_time`` passes."""
+    groups = [("prefill", 1.0, model_calls(cfg, B, lin, lin, tp))]
+    for label, w, kvlen in (
+        ("decode_start", lout / 6.0, lin),
+        ("decode_mid", 4.0 * lout / 6.0, lin + lout // 2),
+        ("decode_end", lout / 6.0, lin + lout),
+    ):
+        groups.append((label, w, model_calls(cfg, B, 1, kvlen, tp)))
+    if pp > 1:
+        # stage boundary activations, per token step and per prefill
+        boundary = (pp - 1) * (B * cfg.d_model * 2.0)
+        groups.append(
+            ("pp_boundary", 1.0, [
+                CommCall("p2p", boundary * lin, 2),
+                CommCall("p2p", boundary, 2, count=lout),
+            ])
+        )
+    return groups
 
 
 # ----------------------------------------------------------------------
@@ -233,47 +209,73 @@ class CommRegressor:
 # ----------------------------------------------------------------------
 
 
-def _sum_calls(calls, kernel_time: Callable, comm_time: Callable) -> float:
-    total = 0.0
-    for _, reps, seq in calls:
-        t = 0.0
-        for c in seq:
-            if isinstance(c, KernelCall):
-                t += c.count * kernel_time(c.kind, c.X)
-            else:
-                t += c.count * comm_time(c.op, c.nbytes, c.n_units)
-        total += reps * t
-    return total
+def _resolve_predictor(predictor, kernel_time, comm_time):
+    if predictor is not None:
+        if kernel_time is not None or comm_time is not None:
+            raise TypeError("pass either predictor= or kernel_time/comm_time, not both")
+        return predictor
+    if kernel_time is None or comm_time is None:
+        raise TypeError(
+            "no predictor given: pass predictor=get_predictor(...) "
+            "(or the legacy kernel_time=/comm_time= callables)"
+        )
+    return CallableTimesPredictor(kernel_time, comm_time)
+
+
+def step_estimate(
+    cfg: ArchConfig, B: int, qlen: int, kvlen: int, *, tp: int,
+    predictor=None, kernel_time: Optional[Callable] = None,
+    comm_time: Optional[Callable] = None,
+) -> Estimate:
+    """One serving step (all layers + head) as a full ``Estimate``."""
+    pred = _resolve_predictor(predictor, kernel_time, comm_time)
+    return pred.predict(model_calls(cfg, B, qlen, kvlen, tp))
 
 
 def step_time(
     cfg: ArchConfig, B: int, qlen: int, kvlen: int, *, tp: int,
-    kernel_time: Callable, comm_time: Callable,
+    predictor=None, kernel_time: Optional[Callable] = None,
+    comm_time: Optional[Callable] = None,
 ) -> float:
-    return _sum_calls(model_calls(cfg, B, qlen, kvlen, tp), kernel_time, comm_time)
+    return step_estimate(
+        cfg, B, qlen, kvlen, tp=tp, predictor=predictor,
+        kernel_time=kernel_time, comm_time=comm_time,
+    ).total_s
+
+
+def request_estimate(
+    cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
+    predictor=None, kernel_time: Optional[Callable] = None,
+    comm_time: Optional[Callable] = None,
+) -> Estimate:
+    """prefill + Simpson-integrated decode as one batched prediction, with
+    a GPipe-style PP bubble surcharge applied to the whole estimate."""
+    pred = _resolve_predictor(predictor, kernel_time, comm_time)
+    est = pred.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp))
+    if pp > 1:
+        est = est.scaled(1.0 + 0.5 * (pp - 1) / pp)  # bubble (single request)
+    return est
 
 
 def request_latency(
     cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
-    kernel_time: Callable, comm_time: Callable,
+    predictor=None, kernel_time: Optional[Callable] = None,
+    comm_time: Optional[Callable] = None,
 ) -> float:
-    """prefill + Simpson-integrated decode, with a GPipe-style PP surcharge."""
-    pre = step_time(cfg, B, lin, lin, tp=tp, kernel_time=kernel_time, comm_time=comm_time)
-    d0 = step_time(cfg, B, 1, lin, tp=tp, kernel_time=kernel_time, comm_time=comm_time)
-    dm = step_time(cfg, B, 1, lin + lout // 2, tp=tp, kernel_time=kernel_time, comm_time=comm_time)
-    d1 = step_time(cfg, B, 1, lin + lout, tp=tp, kernel_time=kernel_time, comm_time=comm_time)
-    dec = lout * (d0 + 4 * dm + d1) / 6.0
-    total = pre + dec
-    if pp > 1:
-        # stage boundary activations, per token step and per prefill
-        boundary = (pp - 1) * (B * cfg.d_model * 2.0)
-        total += comm_time("p2p", boundary * lin, 2) + lout * comm_time("p2p", boundary, 2)
-        total *= 1.0 + 0.5 * (pp - 1) / pp  # bubble surcharge (single request)
-    return total
+    return request_estimate(
+        cfg, B, lin, lout, tp=tp, pp=pp, predictor=predictor,
+        kernel_time=kernel_time, comm_time=comm_time,
+    ).total_s
+
+
+# ----------------------------------------------------------------------
+# deprecated two-lambda constructors (use repro.predict.get_predictor)
+# ----------------------------------------------------------------------
 
 
 def oracle_times(hw: TPUSpec):
-    """(kernel_time, comm_time) backed by hwsim — the 'measured' system."""
+    """Deprecated: use ``get_predictor("oracle", hw)``. Returns the legacy
+    (kernel_time, comm_time) pair backed by hwsim — the 'measured' system."""
     return (
         lambda kind, X: hwsim.simulate(kind, X, hw),
         lambda op, b, n: hwsim.simulate_comm(op, b, n, hw),
@@ -281,7 +283,6 @@ def oracle_times(hw: TPUSpec):
 
 
 def predictor_times(pw, hw: TPUSpec, comm: CommRegressor):
-    return (
-        lambda kind, X: pw.predict_latency(kind, X, hw),
-        lambda op, b, n: comm.predict(op, b, n),
-    )
+    """Deprecated: use ``get_predictor("synperf", hw, estimator=pw,
+    comm=comm)``. Returns the legacy (kernel_time, comm_time) pair."""
+    return get_predictor("synperf", hw, estimator=pw, comm=comm).as_times()

@@ -14,6 +14,12 @@ from repro.core.hardware import REGISTRY, TPUSpec
 from repro.core.nn import TrainedMLP, fit_mlp
 
 
+# bump when the pickle payload layout or the feature contract changes;
+# benchmarks cache fitted models on disk (benchmarks/common.py) and a
+# stale cache must fail loudly, not mispredict silently
+PICKLE_VERSION = 2
+
+
 @dataclasses.dataclass
 class PipeWeave:
     models: dict  # kind -> TrainedMLP
@@ -22,6 +28,8 @@ class PipeWeave:
         return np.clip(self.models[kind].predict(feats), 1e-3, 1.0)
 
     def predict_latency(self, kind: str, X: dict, hw: TPUSpec) -> float:
+        """Scalar per-call prediction (featurizes from scratch every call);
+        for batched, cached estimation use repro.predict.get_predictor."""
         fs = featurize(kind, X, hw)
         eff = self.predict_eff(kind, fs.vector(hw)[None])[0]
         return float(fs.theoretical_s / eff)
@@ -32,13 +40,29 @@ class PipeWeave:
 
     def save(self, path: str):
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        payload = {"__pipeweave_version__": PICKLE_VERSION, "models": self.models}
         with open(path, "wb") as f:
-            pickle.dump(self, f)
+            pickle.dump(payload, f)
 
     @staticmethod
     def load(path: str) -> "PipeWeave":
         with open(path, "rb") as f:
-            return pickle.load(f)
+            obj = pickle.load(f)
+        if isinstance(obj, PipeWeave):
+            raise RuntimeError(
+                f"{path} is a pre-versioning PipeWeave pickle; delete the "
+                "stale cache entry (e.g. rm -r results/bench_cache) and "
+                "retrain (benchmarks.common.get_pipeweave retrains "
+                "automatically on a fresh cache)"
+            )
+        version = obj.get("__pipeweave_version__") if isinstance(obj, dict) else None
+        if version != PICKLE_VERSION:
+            raise RuntimeError(
+                f"{path} has PipeWeave pickle version {version!r}, this code "
+                f"expects {PICKLE_VERSION}; delete the stale cache entry and "
+                "retrain with the current feature contract"
+            )
+        return PipeWeave(models=obj["models"])
 
 
 def train_pipeweave(

@@ -78,11 +78,6 @@ def pinball_loss(pred, y, q: float):
     return jnp.mean(jnp.maximum(q * diff, (q - 1) * diff) / jnp.maximum(y, 1e-3))
 
 
-@jax.jit
-def _eval_forward(params, state, x):
-    return mlp_forward(params, state, x, train=False)[0]
-
-
 @dataclasses.dataclass
 class TrainedMLP:
     params: dict
@@ -99,12 +94,45 @@ class TrainedMLP:
     x_lo: Optional[np.ndarray] = None
     x_hi: Optional[np.ndarray] = None
 
+    def _np_model(self):
+        """Weights/BN stats as float64 numpy, converted once per instance.
+        Inference runs in numpy float64 (not the jitted f32 forward) so
+        per-row results are batch-size independent — the batched predictor
+        path must reproduce per-call scalar sums to 1e-9 — and so batch
+        shape changes never trigger jit recompiles."""
+        cached = getattr(self, "_np_cache", None)
+        if cached is None:
+            layers = [
+                {k: np.asarray(v, np.float64) for k, v in layer.items()}
+                for layer in self.params["layers"]
+            ]
+            bn_mean = [np.asarray(m, np.float64) for m in self.state["bn_mean"]]
+            bn_var = [np.asarray(v, np.float64) for v in self.state["bn_var"]]
+            cached = (layers, bn_mean, bn_var)
+            self._np_cache = cached
+        return cached
+
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        state.pop("_np_cache", None)  # derived; keep pickles lean
+        return state
+
     def predict(self, X: np.ndarray) -> np.ndarray:
-        Xn = (X - self.mu_x) / self.sd_x
+        Xn = (np.asarray(X, np.float64) - self.mu_x) / self.sd_x
         if self.x_lo is not None:
             Xn = np.clip(Xn, self.x_lo, self.x_hi)
-        out = _eval_forward(self.params, self.state, jnp.asarray(Xn, jnp.float32))
-        return np.clip(np.asarray(out), self.y_floor, 1.0)
+        layers, bn_mean, bn_var = self._np_model()
+        h = Xn
+        n_hidden = len(layers) - 1
+        for i, layer in enumerate(layers):
+            h = h @ layer["w"] + layer["b"]
+            if i < n_hidden:
+                h = (h - bn_mean[i]) / np.sqrt(bn_var[i] + 1e-5)
+                h = h * layer["bn_scale"] + layer["bn_bias"]
+                h = np.maximum(h, 0.0)
+        with np.errstate(over="ignore"):  # saturated sigmoid is fine
+            out = 1.0 / (1.0 + np.exp(-h[:, 0]))
+        return np.clip(out, self.y_floor, 1.0)
 
 
 def fit_mlp(

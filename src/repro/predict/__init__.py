@@ -1,0 +1,58 @@
+"""repro.predict — the unified predictor API (SynPerf §IV as a library).
+
+One interface for every latency estimator in the repo: a ``Predictor``
+turns a list (or nested groups) of ``KernelCall``/``CommCall`` into an
+``Estimate`` — total latency plus per-kernel-family / per-comm-op
+breakdowns and the analytical roofline ceiling. Backends (the PipeWeave
+MLPs, the §VI baselines, the analytical roofline, the hwsim oracle) live
+behind one constructor::
+
+    from repro.predict import get_predictor
+    est = get_predictor("synperf", hw, estimator=pw).predict(calls)
+
+Batched prediction groups calls by (kind, canonical workload), memoizes
+``featurize`` across repeated shapes, and runs one vectorized MLP forward
+per kernel family — see ``repro/predict/batching.py`` and
+``docs/predict.md``.
+"""
+from repro.predict.api import (
+    CommCall,
+    Estimate,
+    KernelCall,
+    Predictor,
+    UntrainedFamilyError,
+    flatten_calls,
+)
+from repro.predict.batching import FeatureCache, canonical_x, group_calls
+from repro.predict.comm import CommRegressor
+from repro.predict.backends import (
+    PREDICTORS,
+    BaselinePredictor,
+    BasePredictor,
+    CallableTimesPredictor,
+    OraclePredictor,
+    RooflinePredictor,
+    SynPerfPredictor,
+    get_predictor,
+)
+
+__all__ = [
+    "CommCall",
+    "CommRegressor",
+    "Estimate",
+    "FeatureCache",
+    "KernelCall",
+    "PREDICTORS",
+    "Predictor",
+    "UntrainedFamilyError",
+    "BaselinePredictor",
+    "BasePredictor",
+    "CallableTimesPredictor",
+    "OraclePredictor",
+    "RooflinePredictor",
+    "SynPerfPredictor",
+    "canonical_x",
+    "flatten_calls",
+    "get_predictor",
+    "group_calls",
+]

@@ -1,0 +1,103 @@
+"""Batched-estimation plumbing: canonical workload keys, a memoized
+featurize cache, and call grouping.
+
+A fine-grained E2E assembly re-featurizes the same shapes constantly — a
+decode sweep issues the *identical* GEMM/rmsnorm/silu workloads at every
+cache length (only attention varies with kvlen), and ``model_calls``
+repeats one layer ``n_layers`` times. Grouping by (kind, canonical X) and
+memoizing ``featurize`` turns thousands of per-call analytical passes
+into one pass per unique shape, and lets backends run one vectorized MLP
+forward per kernel family instead of per-call batch-1 inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.dataset import featurize
+from repro.core.hardware import TPUSpec
+from repro.predict.api import CommCall, KernelCall, flatten_calls
+
+
+def canonical_x(X: dict) -> tuple:
+    """Order-independent hashable key for a workload dict."""
+    return tuple(sorted(X.items()))
+
+
+class FeatureCache:
+    """Memoizes ``featurize`` (and the derived feature vector) per
+    (kind, canonical workload, hardware). Bounded: on overflow the cache
+    resets rather than evicting — repeated sweeps re-warm in one pass."""
+
+    def __init__(self, maxsize: int = 100_000):
+        self.maxsize = maxsize
+        self._fs: dict = {}
+        self._vec: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def featureset(self, kind: str, X: dict, hw: TPUSpec):
+        key = (kind, hw.name, canonical_x(X))
+        fs = self._fs.get(key)
+        if fs is None:
+            self.misses += 1
+            fs = featurize(kind, X, hw)
+            if len(self._fs) >= self.maxsize:
+                self._fs.clear()
+                self._vec.clear()
+            self._fs[key] = fs
+        else:
+            self.hits += 1
+        return fs
+
+    def vector(self, kind: str, X: dict, hw: TPUSpec) -> np.ndarray:
+        key = (kind, hw.name, canonical_x(X))
+        v = self._vec.get(key)
+        if v is None:
+            v = self.featureset(kind, X, hw).vector(hw)
+            self._vec[key] = v
+        else:
+            self.hits += 1
+        return v
+
+
+@dataclasses.dataclass
+class FamilyGroup:
+    """Unique workloads of one kernel family with accumulated weights."""
+
+    kind: str
+    workloads: list  # unique dicts, first-seen order
+    weights: list  # parallel floats (sum of call counts x group reps)
+
+    @property
+    def weight_array(self) -> np.ndarray:
+        return np.asarray(self.weights, dtype=np.float64)
+
+
+def group_calls(calls) -> tuple[dict, dict]:
+    """Flatten ``calls`` and group: kernel calls into per-family
+    ``FamilyGroup``s deduplicated by canonical workload, comm calls into
+    ``{(op, nbytes, n_units): weight}``."""
+    families: dict[str, FamilyGroup] = {}
+    index: dict[tuple, int] = {}
+    comms: dict[tuple, float] = {}
+    for call, w in flatten_calls(calls):
+        if w == 0:
+            continue
+        if isinstance(call, KernelCall):
+            key = (call.kind, canonical_x(call.X))
+            i = index.get(key)
+            if i is None:
+                grp = families.setdefault(call.kind, FamilyGroup(call.kind, [], []))
+                index[key] = len(grp.workloads)
+                grp.workloads.append(call.X)
+                grp.weights.append(w)
+            else:
+                families[call.kind].weights[i] += w
+        elif isinstance(call, CommCall):
+            key = (call.op, call.nbytes, call.n_units)
+            comms[key] = comms.get(key, 0.0) + w
+        else:
+            raise TypeError(f"not a KernelCall/CommCall: {call!r}")
+    return families, comms

@@ -1,0 +1,301 @@
+"""repro.predict tests: batched-vs-scalar equivalence, featurize-cache
+correctness, backend registry round-trips, explicit fallback policy,
+versioned estimator pickles, and the e2e legacy-shim equivalence."""
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import hwsim
+from repro.core.baselines import BASELINES
+from repro.core.dataset import build_dataset, featurize
+from repro.core.e2e import (
+    model_calls,
+    oracle_times,
+    request_estimate,
+    request_latency,
+    step_time,
+)
+from repro.core.estimator import PICKLE_VERSION, PipeWeave, train_pipeweave
+from repro.core.hardware import get_hw
+from repro.predict import (
+    CommCall,
+    CommRegressor,
+    Estimate,
+    FeatureCache,
+    KernelCall,
+    PREDICTORS,
+    UntrainedFamilyError,
+    flatten_calls,
+    get_predictor,
+    group_calls,
+)
+
+HW = get_hw("tpu-v5e")
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return {
+        "gemm": build_dataset("gemm", n_workloads=20, seed=3),
+        "rmsnorm": build_dataset("rmsnorm", n_workloads=12, seed=4),
+    }
+
+
+@pytest.fixture(scope="module")
+def pw(small_ds):
+    return train_pipeweave(small_ds, max_epochs=12)
+
+
+@pytest.fixture(scope="module")
+def pw_gemm_only(small_ds):
+    return train_pipeweave({"gemm": small_ds["gemm"]}, max_epochs=8)
+
+
+CALLS = [
+    KernelCall("gemm", {"M": 256, "N": 1024, "K": 512}),
+    KernelCall("gemm", {"M": 256, "N": 1024, "K": 512}),  # duplicate shape
+    KernelCall("gemm", {"M": 8, "N": 2048, "K": 512}, count=3),
+    KernelCall("rmsnorm", {"seq": 64, "dim": 1024}),
+    ("block", 4, [
+        KernelCall("gemm", {"M": 8, "N": 2048, "K": 512}),
+        KernelCall("rmsnorm", {"seq": 64, "dim": 1024}),
+    ]),
+]
+
+
+# ----------------------------------------------------------------------
+# batched == scalar
+# ----------------------------------------------------------------------
+
+
+def test_batched_predict_matches_scalar_sum(pw):
+    pred = get_predictor("synperf", HW, estimator=pw)
+    est = pred.predict(CALLS)
+    scalar = sum(w * pw.predict_latency(c.kind, c.X, HW) for c, w in flatten_calls(CALLS))
+    assert np.isclose(est.kernel_s, scalar, rtol=1e-9, atol=0.0), (est.kernel_s, scalar)
+    assert est.total_s == est.kernel_s  # no comm calls here
+    assert est.n_kernel_calls == 2 + 3 + 1 + 4 * 2
+    assert set(est.by_family) == {"gemm", "rmsnorm"}
+    assert np.isclose(sum(est.by_family.values()), est.kernel_s, rtol=1e-12)
+    assert est.fallbacks == {}
+
+
+def test_estimate_carries_analytical_ceiling(pw):
+    pred = get_predictor("synperf", HW, estimator=pw)
+    est = pred.predict(CALLS)
+    theo = sum(w * featurize(c.kind, c.X, HW).theoretical_s
+               for c, w in flatten_calls(CALLS))
+    assert np.isclose(est.theoretical_s, theo, rtol=1e-9)
+    # predicted efficiency <= 1, so latency >= ceiling
+    assert est.kernel_s >= est.theoretical_s * 0.999
+
+
+# ----------------------------------------------------------------------
+# featurize cache + grouping
+# ----------------------------------------------------------------------
+
+
+def test_featurize_cache_hit_returns_identical_features():
+    cache = FeatureCache()
+    X = {"M": 128, "N": 512, "K": 256}
+    v1 = cache.vector("gemm", X, HW)
+    assert cache.misses == 1 and cache.hits == 0
+    # key order must not matter
+    v2 = cache.vector("gemm", dict(reversed(list(X.items()))), HW)
+    assert cache.hits == 1 and cache.misses == 1
+    assert np.array_equal(v1, v2)
+    fresh = featurize("gemm", X, HW)
+    assert np.array_equal(v1, fresh.vector(HW))
+    assert cache.featureset("gemm", X, HW).theoretical_s == fresh.theoretical_s
+
+
+def test_group_calls_dedups_and_accumulates_weights():
+    fams, comms = group_calls(CALLS + [CommCall("all_reduce", 1e6, 4, count=2)])
+    assert set(fams) == {"gemm", "rmsnorm"}
+    gemm = fams["gemm"]
+    assert len(gemm.workloads) == 2  # two unique shapes
+    assert dict(zip([w["M"] for w in gemm.workloads], gemm.weights)) == {256: 2.0, 8: 7.0}
+    assert fams["rmsnorm"].weights == [5.0]
+    assert comms == {("all_reduce", 1e6, 4): 2.0}
+
+
+# ----------------------------------------------------------------------
+# registry round-trip
+# ----------------------------------------------------------------------
+
+
+def test_registry_roundtrip_all_backends(pw, small_ds):
+    calls = [
+        KernelCall("gemm", {"M": 64, "N": 512, "K": 256}, count=2),
+        CommCall("all_reduce", 1e6, 4),
+    ]
+    fitted = {"gemm": BASELINES["linear"]().fit(small_ds["gemm"])}
+    comm = CommRegressor().fit(HW)
+    kwargs = {
+        "synperf": dict(estimator=pw, comm=comm),
+        "roofline": dict(comm=comm),
+        "oracle": {},
+        "linear": dict(models=fitted, comm=comm),
+        "habitat": dict(models={"gemm": BASELINES["roofline"]().fit(small_ds["gemm"])},
+                        comm=comm),
+        "neusight": dict(models={"gemm": BASELINES["roofline"]().fit(small_ds["gemm"])},
+                         comm=comm),
+    }
+    assert set(kwargs) == set(PREDICTORS)
+    for name in PREDICTORS:
+        pred = get_predictor(name, HW, **kwargs[name])
+        est = pred.predict(calls)
+        assert isinstance(est, Estimate), name
+        assert np.isfinite(est.total_s) and est.total_s > 0, name
+        assert est.kernel_s > 0 and est.comm_s > 0, name
+        assert est.total_s == pytest.approx(est.kernel_s + est.comm_s), name
+        # scalar conveniences agree with the batched path
+        assert pred.kernel_time("gemm", {"M": 64, "N": 512, "K": 256}) > 0, name
+
+
+def test_unknown_backend_is_actionable():
+    with pytest.raises(KeyError, match="synperf"):
+        get_predictor("definitely-not-a-backend", HW)
+
+
+def test_synperf_without_estimator_is_actionable(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_CACHE", str(tmp_path))
+    with pytest.raises(RuntimeError, match="estimator"):
+        get_predictor("synperf", HW)
+
+
+def test_baseline_without_models_is_actionable():
+    with pytest.raises(TypeError, match="models"):
+        get_predictor("habitat", HW)
+
+
+def test_oracle_backend_matches_hwsim():
+    pred = get_predictor("oracle", HW)
+    X = {"M": 64, "N": 512, "K": 256}
+    assert pred.kernel_time("gemm", X) == pytest.approx(hwsim.simulate("gemm", X, HW))
+    assert pred.comm_time("p2p", 1e6, 2) == pytest.approx(
+        hwsim.simulate_comm("p2p", 1e6, 2, HW)
+    )
+
+
+# ----------------------------------------------------------------------
+# explicit fallback policy
+# ----------------------------------------------------------------------
+
+
+def test_untrained_family_raises_by_default(pw_gemm_only):
+    pred = get_predictor("synperf", HW, estimator=pw_gemm_only)
+    with pytest.raises(UntrainedFamilyError, match="rmsnorm"):
+        pred.predict(CALLS)
+
+
+def test_fallback_oracle_is_recorded_not_silent(pw_gemm_only):
+    pred = get_predictor("synperf", HW, estimator=pw_gemm_only, fallback="oracle")
+    est = pred.predict(CALLS)
+    assert est.fallbacks == {"rmsnorm": "oracle"}
+    oracle_rms = 5.0 * hwsim.simulate("rmsnorm", {"seq": 64, "dim": 1024}, HW)
+    assert est.by_family["rmsnorm"] == pytest.approx(oracle_rms)
+
+
+def test_fallback_roofline_uses_theoretical(pw_gemm_only):
+    pred = get_predictor("synperf", HW, estimator=pw_gemm_only, fallback="roofline")
+    est = pred.predict(CALLS)
+    assert est.fallbacks == {"rmsnorm": "roofline"}
+    theo_rms = 5.0 * featurize("rmsnorm", {"seq": 64, "dim": 1024}, HW).theoretical_s
+    assert est.by_family["rmsnorm"] == pytest.approx(theo_rms)
+
+
+def test_bad_fallback_value_rejected():
+    with pytest.raises(ValueError, match="fallback"):
+        get_predictor("oracle", HW, fallback="silent")
+
+
+# ----------------------------------------------------------------------
+# comm regressor behind the API
+# ----------------------------------------------------------------------
+
+
+def test_unfitted_comm_regressor_raises_clear_error():
+    with pytest.raises(RuntimeError, match="fit"):
+        CommRegressor().predict("all_reduce", 1e6, 4)
+
+
+def test_backend_autofits_comm_lazily():
+    pred = get_predictor("roofline", HW)
+    assert pred._comm is None  # not fitted until a comm call arrives
+    t = pred.comm_time("all_reduce", 1e7, 4)
+    assert t > 0 and pred._comm is not None
+
+
+# ----------------------------------------------------------------------
+# versioned estimator pickles
+# ----------------------------------------------------------------------
+
+
+def test_pipeweave_pickle_roundtrip(pw, tmp_path):
+    p = str(tmp_path / "pw.pkl")
+    pw.save(p)
+    loaded = PipeWeave.load(p)
+    X = {"M": 128, "N": 512, "K": 256}
+    assert loaded.predict_latency("gemm", X, HW) == pw.predict_latency("gemm", X, HW)
+
+
+def test_pipeweave_load_rejects_wrong_version(pw, tmp_path):
+    p = str(tmp_path / "pw.pkl")
+    with open(p, "wb") as f:
+        pickle.dump({"__pipeweave_version__": PICKLE_VERSION + 1, "models": pw.models}, f)
+    with pytest.raises(RuntimeError, match="version"):
+        PipeWeave.load(p)
+
+
+def test_pipeweave_load_rejects_preversioning_pickle(pw, tmp_path):
+    p = str(tmp_path / "pw.pkl")
+    with open(p, "wb") as f:
+        pickle.dump(pw, f)  # the old save() format: the raw object
+    with pytest.raises(RuntimeError, match="pre-versioning"):
+        PipeWeave.load(p)
+
+
+# ----------------------------------------------------------------------
+# e2e on the new API
+# ----------------------------------------------------------------------
+
+
+def test_lm_head_gemm_covers_prefill_tokens():
+    cfg = get_arch("qwen3-0.6b")
+    def head_gemm(qlen):
+        (_, _, head) = next(g for g in model_calls(cfg, 4, qlen, 128, 1)
+                            if g[0] == "head")
+        return next(c for c in head if isinstance(c, KernelCall) and c.kind == "gemm")
+    assert head_gemm(128).X["M"] == 4 * 128  # prefill: every position
+    assert head_gemm(1).X["M"] == 4  # decode: one position per sequence
+
+
+def test_request_estimate_matches_legacy_lambda_path():
+    cfg = get_arch("qwen3-0.6b")
+    kt, ct = oracle_times(HW)
+    legacy = request_latency(cfg, 2, 64, 8, tp=1, kernel_time=kt, comm_time=ct)
+    est = request_estimate(cfg, 2, 64, 8, tp=1, predictor=get_predictor("oracle", HW))
+    assert np.isclose(est.total_s, legacy, rtol=1e-9)
+    assert est.theoretical_s is not None and 0 < est.theoretical_s <= est.total_s
+
+
+def test_step_time_rejects_ambiguous_arguments():
+    cfg = get_arch("qwen3-0.6b")
+    kt, ct = oracle_times(HW)
+    with pytest.raises(TypeError):
+        step_time(cfg, 2, 8, 8, tp=1)  # neither predictor nor lambdas
+    with pytest.raises(TypeError):
+        step_time(cfg, 2, 8, 8, tp=1, predictor=get_predictor("oracle", HW),
+                  kernel_time=kt, comm_time=ct)
+
+
+def test_pp_bubble_scales_whole_estimate():
+    cfg = get_arch("qwen3-0.6b")
+    oracle = get_predictor("oracle", HW)
+    e1 = request_estimate(cfg, 2, 64, 8, tp=1, pp=1, predictor=oracle)
+    e2 = request_estimate(cfg, 2, 64, 8, tp=1, pp=2, predictor=oracle)
+    assert e2.total_s > e1.total_s
+    assert e2.comm_s > 0  # stage-boundary p2p traffic
