@@ -8,30 +8,23 @@ featurize + batch-1 forward per call) vs one ``repro.predict`` batched
 vectorized forward per family). Target: >=10x."""
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import numpy as np
 
-from benchmarks.common import Csv, get_pipeweave
+from benchmarks.common import Csv, decode_sweep_trace, get_pipeweave, write_bench_json
 from repro.core import hwsim
 from repro.core.dataset import mape, sample_workload
-from repro.core.e2e import model_calls
 from repro.core.hardware import get_hw
 from repro.configs import get_arch
-from repro.predict import FeatureCache, KernelCall, flatten_calls, get_predictor
+from repro.predict import FeatureCache, get_predictor
+
+SPEEDUP_TARGET = 10.0  # batched predict vs per-call scalar (ISSUE 2)
 
 
-def _decode_sweep(cfg, B=8, lin=256, steps=64):
-    """The call sequence of a lock-step decode sweep: one model_calls group
-    per generated token, KV growing each step — the fine-grained E2E
-    assembly whose repeated GEMM/rmsnorm shapes batching exploits."""
-    return [
-        (f"decode@{lin + i}", 1.0, model_calls(cfg, B, 1, lin + i, tp=1))
-        for i in range(steps)
-    ]
-
-
-def run(csv: Csv):
+def run(csv: Csv) -> dict:
     pw = get_pipeweave()
     hw = get_hw("tpu-v5e")
     rng = np.random.default_rng(11)
@@ -63,11 +56,7 @@ def run(csv: Csv):
     # issue for a lock-step decode sweep — layers unrolled, one call per
     # launch — which is exactly what per-call prediction has to chew through
     cfg = get_arch("qwen3-0.6b")
-    sweep = _decode_sweep(cfg, steps=48)
-    trace = []
-    for call, w in flatten_calls(sweep):
-        # unit-count copies: flatten already folded call.count into w
-        trace += [KernelCall(call.kind, call.X)] * int(round(w))
+    trace = decode_sweep_trace(cfg)
 
     def scalar_pass():
         return sum(pw.predict_latency(c.kind, c.X, hw) for c in trace)
@@ -93,4 +82,38 @@ def run(csv: Csv):
     csv.add("fig7/batched_predict_us_per_call", batched_us / len(trace),
             f"rel_diff_vs_scalar={agree:.2e}")
     csv.add("fig7/batched_speedup", 0.0,
-            f"{speedup:.1f}x (target >=10x, ISSUE 2)")
+            f"{speedup:.1f}x (target >={SPEEDUP_TARGET:.0f}x, ISSUE 2)")
+    return {
+        "trace_calls": len(trace),
+        "batched_speedup": speedup,
+        "speedup_target": SPEEDUP_TARGET,
+        "rel_diff_vs_scalar": agree,
+        "pred_us_per_gemm": t_pred,
+        "hwsim_us_per_gemm": t_sim,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help=f"exit non-zero unless batched speedup >= "
+                         f"{SPEEDUP_TARGET:.0f}x (the CI gate)")
+    ap.add_argument("--json", help="write BENCH_overhead.json-style artifact here")
+    args = ap.parse_args(argv)
+    csv = Csv()
+    print("name,us_per_call,derived")
+    results = run(csv)
+    ok = results["batched_speedup"] >= SPEEDUP_TARGET
+    if args.check and not ok:
+        print(
+            f"# CHECK FAILURE: batched speedup {results['batched_speedup']:.1f}x "
+            f"< {SPEEDUP_TARGET:.0f}x target",
+            file=sys.stderr,
+        )
+    if args.json:
+        write_bench_json(args.json, csv, **results, passed=bool(ok))
+    return 0 if (ok or not args.check) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,171 @@
+"""Multi-hardware sweep benchmark (ISSUE 3): one 12k-call decode trace
+priced on many registry entries.
+
+Reports three things:
+
+  * wall-clock — a shared ``SweepPredictor`` pass over ``SWEEP_HWS`` (6
+    devices) vs a single-hw batched predict vs N independent per-hw
+    predicts (the naive sweep). Criterion (asserted in ``--smoke``):
+    shared sweep < 3x single-hw (naive is ~6x) — grouping runs once and
+    decompose+schedule are shared under ``task_sig``;
+  * per-hw accuracy — measured (hwsim oracle) vs predicted total for the
+    trace on the *full* registry, aggregated over the paper's seen/unseen
+    hardware split;
+  * sweep scaling — wall-clock per additional device.
+
+Standalone: ``python -m benchmarks.bench_sweep [--smoke] [--json PATH]``
+(non-zero exit when the smoke criterion fails — the CI gate).
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import math
+import sys
+import time
+
+from benchmarks.common import Csv, decode_sweep_trace, get_pipeweave, write_bench_json
+from repro.configs import get_arch
+from repro.core.hardware import REGISTRY, get_hw
+from repro.predict import FeatureCache, SweepPredictor, get_predictor
+
+# >= 6 hardware (ISSUE 3 criterion), both splits, all three chip counts
+SWEEP_HWS = ("tpu-v5e", "tpu-v4", "tpu-v5p", "tpu-v6e", "tpu-v5e-16", "tpu-v7p")
+SINGLE_HW = "tpu-v5e"
+MAX_RATIO = 3.0  # shared sweep must beat 3x single-hw predict
+
+
+def _timed(fn, reps: int = 1) -> tuple:
+    """(wall seconds per pass, last result): times ``reps`` consecutive
+    passes as one sample so scheduler jitter amortizes over a longer
+    window (a single pass is ~20ms — too short to gate on alone)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn()
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run(csv: Csv, smoke: bool = False) -> dict:
+    pw = get_pipeweave()
+    cfg = get_arch("qwen3-0.6b")
+    trace = decode_sweep_trace(cfg)
+    csv.add("sweep/trace_calls", 0.0, f"{len(trace)} calls, decode sweep 48 steps")
+
+    # fresh caches per timed pass: the comparison must not lean on state
+    # warmed by a previous run (same protocol as bench_overhead)
+    def single_pass():
+        p = get_predictor("synperf", get_hw(SINGLE_HW), estimator=pw, cache=FeatureCache())
+        return p.predict(trace)
+
+    def naive_pass():
+        return {
+            name: get_predictor(
+                "synperf", get_hw(name), estimator=pw, cache=FeatureCache()
+            ).predict(trace)
+            for name in SWEEP_HWS
+        }
+
+    def shared_pass():
+        return SweepPredictor(SWEEP_HWS, estimator=pw, cache=FeatureCache()).predict(trace)
+
+    single_pass()  # warm numpy/BLAS paths once
+    # best-of-N on each side, each sample timing 3 consecutive passes
+    # inside a GC-disabled window (GC pauses over the 12k-call flatten are
+    # the main single-process noise; batching amortizes scheduler jitter)
+    rounds = []
+    for _ in range(5 if smoke else 3):
+        gc.collect()
+        gc.disable()
+        try:
+            t_single, single_est = _timed(single_pass, reps=3)
+            t_shared, shared_res = _timed(shared_pass, reps=3)
+        finally:
+            gc.enable()
+        rounds.append((t_single, t_shared))
+    single_s = min(t for t, _ in rounds)
+    shared_s = min(t for _, t in rounds)
+    ratio = shared_s / max(single_s, 1e-12)
+    naive_s, naive_res = _timed(naive_pass)
+    naive_ratio = naive_s / max(single_s, 1e-12)
+    csv.add("sweep/single_hw_us_per_call", single_s * 1e6 / len(trace),
+            f"{single_s*1e3:.1f}ms total on {SINGLE_HW}")
+    csv.add("sweep/shared_sweep_us_per_call", shared_s * 1e6 / len(trace),
+            f"{shared_s*1e3:.1f}ms over {len(SWEEP_HWS)} hw")
+    csv.add("sweep/naive_sweep_us_per_call", naive_s * 1e6 / len(trace),
+            f"{naive_s*1e3:.1f}ms ({naive_ratio:.1f}x single)")
+    csv.add("sweep/ratio_vs_single", 0.0,
+            f"{ratio:.2f}x (target <{MAX_RATIO}x, naive ~{naive_ratio:.1f}x)")
+
+    # correctness: the shared pass must equal the naive per-hw passes
+    max_rel = max(
+        abs(shared_res[n].total_s - naive_res[n].total_s)
+        / max(naive_res[n].total_s, 1e-12)
+        for n in SWEEP_HWS
+    )
+    csv.add("sweep/shared_vs_naive_rel_diff", 0.0, f"{max_rel:.2e}")
+
+    # ---- accuracy: measured (oracle) vs predicted over the full registry --
+    hws = SWEEP_HWS if smoke else tuple(REGISTRY)
+    sp = SweepPredictor(hws, estimator=pw, cache=FeatureCache())
+    cmp = sp.compare(trace)
+    per_hw = {}
+    for name in hws:
+        err = cmp.err_pct(name)
+        per_hw[name] = err
+        csv.add(f"sweep/err/{name}", 0.0, f"{err:.1f}%")
+    split = cmp.split_mape()
+    csv.add("sweep/mape_seen", 0.0, f"{split['seen']:.1f}%")
+    csv.add("sweep/mape_unseen", 0.0, f"{split['unseen']:.1f}%")
+    for fam, err in sorted(cmp.family_mape().items()):
+        csv.add(f"sweep/family_mape/{fam}", 0.0, f"{err:.1f}%")
+
+    results = {
+        "trace_calls": len(trace),
+        "n_hw": len(SWEEP_HWS),
+        "single_hw_s": single_s,
+        "shared_sweep_s": shared_s,
+        "naive_sweep_s": naive_s,
+        "ratio_vs_single": ratio,
+        "naive_ratio_vs_single": naive_ratio,
+        "max_ratio_target": MAX_RATIO,
+        "shared_vs_naive_rel_diff": max_rel,
+        "per_hw_err_pct": per_hw,
+        # null, not the non-standard NaN literal, when a split is empty
+        "mape_seen": None if math.isnan(split["seen"]) else split["seen"],
+        "mape_unseen": None if math.isnan(split["unseen"]) else split["unseen"],
+        "single_total_ms": single_est.total_s * 1e3,
+    }
+    if smoke:
+        assert max_rel < 1e-9, f"shared sweep diverged from per-hw predicts: {max_rel:.2e}"
+        assert ratio < MAX_RATIO, (
+            f"sweep over {len(SWEEP_HWS)} hw took {ratio:.2f}x a single-hw "
+            f"predict (target <{MAX_RATIO}x; naive is ~{naive_ratio:.1f}x) — "
+            "featurization sharing regressed"
+        )
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert the <3x sweep criterion (CI gate) and trim "
+                         "the accuracy table to the sweep hardware")
+    ap.add_argument("--json", help="write BENCH_sweep.json-style artifact here")
+    args = ap.parse_args(argv)
+    csv = Csv()
+    print("name,us_per_call,derived")
+    try:
+        results = run(csv, smoke=args.smoke)
+        failed = False
+    except AssertionError as e:
+        print(f"# SMOKE FAILURE: {e}", file=sys.stderr)
+        results = {"error": str(e)}
+        failed = True
+    if args.json:
+        write_bench_json(args.json, csv, **results, passed=not failed)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

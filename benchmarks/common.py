@@ -110,6 +110,39 @@ def get_backend(name: str, hw: TPUSpec, **kw):
     return backend
 
 
+def decode_sweep_trace(cfg, B: int = 8, lin: int = 256, steps: int = 48) -> list:
+    """The unrolled kernel-invocation trace of a lock-step decode sweep:
+    one ``model_calls`` group per generated token with growing KV, fully
+    flattened to unit-count calls (~12k calls at the default shape for
+    qwen3-0.6b) — the workload the batched/sweep predictors are scored on."""
+    from repro.core.e2e import model_calls
+    from repro.predict import KernelCall, flatten_calls
+
+    nested = [
+        (f"decode@{lin + i}", 1.0, model_calls(cfg, B, 1, lin + i, tp=1))
+        for i in range(steps)
+    ]
+    trace = []
+    for call, w in flatten_calls(nested):
+        # unit-count copies: flatten already folded call.count into w
+        trace += [KernelCall(call.kind, call.X)] * int(round(w))
+    return trace
+
+
+def write_bench_json(path: str, csv: "Csv", **extra):
+    """Dump a benchmark's CSV rows (plus structured extras) as the
+    ``BENCH_*.json`` artifact the CI bench job uploads and gates on."""
+    payload = {
+        "rows": [
+            {"name": n, "us_per_call": u, "derived": d} for n, u, d in csv.rows
+        ],
+        **extra,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
+
+
 class Csv:
     """Collects ``name,us_per_call,derived`` rows (the run.py contract)."""
 

@@ -7,9 +7,12 @@
    with per-family breakdown, the analytical ceiling, and an *explicit*
    fallback for kernel families the estimator was not trained on (here we
    only train the gemm family, so everything else is visibly served by the
-   oracle — nothing falls back silently).
+   oracle — nothing falls back silently);
+4. (``--sweep``) price the same request across the whole hardware
+   registry in one ``request_sweep`` pass and score it against the oracle
+   over the paper's seen/unseen generalization split.
 
-Run: PYTHONPATH=src python examples/quickstart.py [--n-workloads 120]
+Run: PYTHONPATH=src python examples/quickstart.py [--n-workloads 120] [--sweep]
 """
 import argparse
 
@@ -17,14 +20,14 @@ import numpy as np
 
 from repro.core import hwsim
 from repro.core.dataset import build_dataset, featurize, mape, SEEN, UNSEEN
-from repro.core.e2e import request_estimate
+from repro.core.e2e import request_calls, request_estimate, request_sweep
 from repro.core.estimator import train_pipeweave
 from repro.core.hardware import get_hw
 from repro.configs import get_arch
-from repro.predict import get_predictor
+from repro.predict import SweepPredictor, get_predictor
 
 
-def main(n_workloads: int = 120, max_epochs: int = 250):
+def main(n_workloads: int = 120, max_epochs: int = 250, sweep: bool = False):
     hw_seen = get_hw("tpu-v5e")
     hw_unseen = get_hw("tpu-v6e")
 
@@ -69,11 +72,24 @@ def main(n_workloads: int = 120, max_epochs: int = 250):
                       sorted(est.by_family.items(), key=lambda kv: -kv[1])))
     print(f"  families served by fallback: {est.fallbacks or 'none'}")
 
+    # --- 4. multi-hardware sweep (optional) ------------------------------
+    if sweep:
+        print("\n== sweep: same request across the whole hardware registry ==")
+        sp = SweepPredictor(estimator=pw, fallback="oracle")
+        res = request_sweep(cfg, 8, 982, 64, tp=1, sweep=sp)
+        print(res.table())
+        cmp = sp.compare(request_calls(cfg, 8, 982, 64, tp=1))
+        print("\n  measured (oracle) vs predicted:")
+        print(cmp.table())
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-workloads", type=int, default=120,
                     help="dataset size for the demo estimator (CI uses a small value)")
     ap.add_argument("--max-epochs", type=int, default=250)
+    ap.add_argument("--sweep", action="store_true",
+                    help="also price the E2E request on every registry "
+                         "hardware (seen/unseen generalization table)")
     args = ap.parse_args()
-    main(n_workloads=args.n_workloads, max_epochs=args.max_epochs)
+    main(n_workloads=args.n_workloads, max_epochs=args.max_epochs, sweep=args.sweep)

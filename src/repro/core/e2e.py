@@ -7,8 +7,10 @@ collective calls of TP/EP/PP. Latency estimation is delegated to a
 ``repro.predict`` backend: ``request_estimate(cfg, ..., predictor=p)``
 returns an ``Estimate`` with the total plus per-family/per-op breakdown and
 the analytical ceiling; ``step_time``/``request_latency`` are the scalar
-views. The legacy ``kernel_time``/``comm_time`` two-lambda kwargs are kept
-as a deprecation shim (wrapped in ``CallableTimesPredictor``).
+views and ``request_sweep`` prices the same request on many hardware at
+once (``repro.predict.sweep``). The legacy ``kernel_time``/``comm_time``
+two-lambda kwargs are kept as a deprecation shim (wrapped in
+``CallableTimesPredictor``).
 
 Modeling conventions (documented deviations):
   * one REGISTRY slice = one accelerator unit (the paper's "GPU"); TP/PP
@@ -36,6 +38,7 @@ from repro.core.hardware import TPUSpec
 from repro.predict.api import CommCall, Estimate, KernelCall  # noqa: F401
 from repro.predict.backends import CallableTimesPredictor, get_predictor
 from repro.predict.comm import CommRegressor  # noqa: F401
+from repro.predict.sweep import SweepPredictor, SweepResult
 
 
 def _gemm(M, N, K, count=1):
@@ -170,7 +173,9 @@ def model_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list
     if tp > 1:
         head.append(CommCall("all_gather", head_tokens * cfg.padded_vocab // tp * 4.0, tp))
     calls.append(("head", 1, head))
-    if cfg.family == "audio":
+    # the audio encoder runs once per request, at prefill — decode steps
+    # (qlen == 1) reuse its output, so they must not re-price it
+    if cfg.family == "audio" and qlen > 1:
         enc = layer_calls(
             dataclasses.replace(cfg, family="dense"), B, cfg.enc_frames, cfg.enc_frames, tp
         )
@@ -255,6 +260,30 @@ def request_estimate(
     if pp > 1:
         est = est.scaled(1.0 + 0.5 * (pp - 1) / pp)  # bubble (single request)
     return est
+
+
+def request_sweep(
+    cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
+    hws=None, sweep: Optional[SweepPredictor] = None, backend: str = "synperf",
+    **backend_kw,
+) -> SweepResult:
+    """``request_estimate`` across many devices: the same request call
+    sequence priced on every hardware in ``hws`` (default: the full
+    registry) with one grouping pass and a shared task/feature cache.
+
+    Pass a prebuilt ``sweep=SweepPredictor(...)`` to amortize backend
+    construction and cache warmth across requests; otherwise ``backend`` +
+    ``**backend_kw`` construct one per call (e.g. ``estimator=pw``)."""
+    if sweep is not None and (hws is not None or backend != "synperf" or backend_kw):
+        raise TypeError(
+            "pass either sweep= (a prebuilt SweepPredictor) or "
+            "hws=/backend=/backend kwargs, not both"
+        )
+    sp = sweep if sweep is not None else SweepPredictor(hws, backend, **backend_kw)
+    res = sp.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp))
+    if pp > 1:
+        res = res.scaled(1.0 + 0.5 * (pp - 1) / pp)  # same bubble surcharge
+    return res
 
 
 def request_latency(

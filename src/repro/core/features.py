@@ -72,8 +72,12 @@ class FeatureSet:
 FEATURE_DIM = 5 * len(PIPES) + 3 + len(PIPES) + 11
 
 
-def analyze(tasks: TaskArray, chip_of: np.ndarray, hw: TPUSpec) -> FeatureSet:
-    n = hw.num_chips
+def demand_summary(tasks: TaskArray, chip_of: np.ndarray, n_chips: int) -> tuple:
+    """The hardware-independent half of :func:`analyze`: per-pipe total and
+    max-chip demand plus chip usage, a function of (tasks, chip_of) only.
+    Multi-hardware sweeps cache this per task signature
+    (``repro.predict.batching.FeatureCache``) so only the cycle conversions
+    below fan out per device."""
     demands = {
         "mxu": tasks.mxu,
         "vpu": tasks.vpu,
@@ -81,21 +85,35 @@ def analyze(tasks: TaskArray, chip_of: np.ndarray, hw: TPUSpec) -> FeatureSet:
         "hbm": tasks.hbm,
         "vmem": tasks.vmem,
     }
-    totals, max_chip, max_chip_cycles, total_cycles = {}, {}, {}, {}
+    totals, max_chip = {}, {}
     for p, d in demands.items():
         totals[p] = float(d.sum())
-        per_chip = np.bincount(chip_of, weights=d, minlength=n) if len(d) else np.zeros(n)
+        per_chip = (
+            np.bincount(chip_of, weights=d, minlength=n_chips)
+            if len(d)
+            else np.zeros(n_chips)
+        )
         max_chip[p] = float(per_chip.max())
+    used = int(len(np.unique(chip_of))) if len(chip_of) else 0
+    return totals, max_chip, used, len(tasks)
+
+
+def analyze_summary(summary: tuple, hw: TPUSpec) -> FeatureSet:
+    """Per-hardware cycle conversion of a :func:`demand_summary` — pure
+    float math, no task-array traversal."""
+    totals, max_chip, used, n_tasks = summary
+    max_chip_cycles, total_cycles = {}, {}
+    n = hw.num_chips
+    for p in PIPES:
         total_cycles[p] = totals[p] / (n * throughput(hw, p))
         max_chip_cycles[p] = max_chip[p] / throughput(hw, p)
     theoretical = max(max(total_cycles.values()), 1.0)
-    used = int(len(np.unique(chip_of))) if len(chip_of) else 0
     return FeatureSet(
         totals=totals,
         total_cycles=total_cycles,
         max_chip=max_chip,
         max_chip_cycles=max_chip_cycles,
-        n_tasks=len(tasks),
+        n_tasks=n_tasks,
         n_chips_used=used,
         theoretical_cycles=theoretical,
         # kernel dispatch overhead is part of the spec (Table II analogue),
@@ -104,3 +122,7 @@ def analyze(tasks: TaskArray, chip_of: np.ndarray, hw: TPUSpec) -> FeatureSet:
         # resolve relatively
         theoretical_s=theoretical / (hw.clock_ghz * 1e9) + hw.launch_us * 1e-6,
     )
+
+
+def analyze(tasks: TaskArray, chip_of: np.ndarray, hw: TPUSpec) -> FeatureSet:
+    return analyze_summary(demand_summary(tasks, chip_of, hw.num_chips), hw)

@@ -159,7 +159,31 @@ _PARAM_RULES: dict[str, tuple] = {
     "in_proj": ("fsdp", "tp"),
     "out_proj": ("tp", "fsdp"),
     "conv_w": ("fsdp", None),
+    "conv_b": ("fsdp",),
+    # SSM per-head vectors follow the cache's head sharding
+    # (cache_pspecs shards the H dim of (B, H, hd, N) states on tp)
+    "A_log": ("tp",),
+    "D": ("tp",),
+    "dt_bias": ("tp",),
+    # norm scales/biases and residual gates are elementwise over activation
+    # dims that stay unsharded — replicate (sharding them under the generic
+    # matrix fallback would split the layer-stack dim, audited ISSUE 3)
+    "w": (None,),
+    "b": (None,),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    "norm_attn": (None,),
+    "norm_ssm": (None,),
+    "gate_norm": (None,),
+    "gate_attn": (),
+    "gate_ffn": (),
 }
+
+#: every parameter leaf name that has been explicitly audited against the
+#: production mesh; ``test_param_rules_cover_all_archs`` fails when a model
+#: introduces a leaf name outside this set, forcing a deliberate rule
+#: instead of a silent generic fallback
+AUDITED_PARAM_LEAVES = frozenset(_PARAM_RULES)
 
 # Expert-parallel variants: the stacked (E, d, f) weights shard experts on
 # the model axis; the hidden dim must then stay unsharded (axis reuse).

@@ -14,6 +14,13 @@ Batched prediction groups calls by (kind, canonical workload), memoizes
 ``featurize`` across repeated shapes, and runs one vectorized MLP forward
 per kernel family — see ``repro/predict/batching.py`` and
 ``docs/predict.md``.
+
+Multi-hardware sweeps (the paper's generalization protocol) run one trace
+against many registry entries sharing one grouping pass and one task-level
+cache::
+
+    from repro.predict import SweepPredictor
+    res = SweepPredictor(["tpu-v5e", "tpu-v6e"], estimator=pw).predict(calls)
 """
 from repro.predict.api import (
     CommCall,
@@ -23,8 +30,9 @@ from repro.predict.api import (
     UntrainedFamilyError,
     flatten_calls,
 )
-from repro.predict.batching import FeatureCache, canonical_x, group_calls
+from repro.predict.batching import FeatureCache, canonical_x, group_calls, task_sig
 from repro.predict.comm import CommRegressor
+from repro.predict.sweep import SweepComparison, SweepPredictor, SweepResult
 from repro.predict.backends import (
     PREDICTORS,
     BaselinePredictor,
@@ -50,9 +58,13 @@ __all__ = [
     "CallableTimesPredictor",
     "OraclePredictor",
     "RooflinePredictor",
+    "SweepComparison",
+    "SweepPredictor",
+    "SweepResult",
     "SynPerfPredictor",
     "canonical_x",
     "flatten_calls",
     "get_predictor",
     "group_calls",
+    "task_sig",
 ]

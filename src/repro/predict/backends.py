@@ -98,7 +98,12 @@ class BasePredictor:
         return self._theoretical_latencies(kind, workloads)
 
     def predict(self, calls) -> Estimate:
-        families, comms = group_calls(calls)
+        return self.predict_grouped(*group_calls(calls))
+
+    def predict_grouped(self, families: dict, comms: dict) -> Estimate:
+        """Estimate pre-grouped calls (the output of ``group_calls``).
+        ``SweepPredictor`` uses this to flatten+group a trace once and fan
+        out only the per-hardware stages."""
         by_family: dict = {}
         fallbacks: dict = {}
         kernel_s = 0.0

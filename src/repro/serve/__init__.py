@@ -1,1 +1,2 @@
-"""Serving engine: continuous batching over prefill/decode steps."""
+"""Serving engine: continuous batching over prefill/decode steps, plus
+trace capture (``serve.trace``) feeding the predict layer."""

@@ -38,12 +38,16 @@ class Result:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ArchConfig, params=None, seed: int = 0, max_batch: int = 8):
+    def __init__(self, cfg: ArchConfig, params=None, seed: int = 0, max_batch: int = 8,
+                 recorder=None):
         self.cfg = cfg
         self.api = build_model(cfg)
         self.params = params if params is not None else self.api.init(jax.random.PRNGKey(seed))
         self.max_batch = max_batch
         self.queue: list[Request] = []
+        # optional serve.trace.TraceRecorder: every executed step also emits
+        # its decomposer call sequence (actual launched shapes)
+        self.recorder = recorder
         self._decode = jax.jit(self.api.decode, donate_argnums=(1,))
         self._prefill = jax.jit(self.api.prefill)
 
@@ -84,6 +88,8 @@ class ServeEngine:
         max_new = max(r.max_new for r in batch_reqs)
 
         t0 = time.perf_counter()
+        if self.recorder is not None:
+            self.recorder.record_step(f"prefill[b{B}xL{L}]", self.cfg, B, L, L)
         batch = {"tokens": toks, **self._extra_inputs(B, jax.random.PRNGKey(1))}
         logits, caches = self._prefill(self.params, batch)
         caches = T.pad_cache(caches, self.cfg, L + max_new)
@@ -98,6 +104,12 @@ class ServeEngine:
             outputs[i].append(int(cur[i]))
         for step in range(max_new - 1):
             pos = jnp.full((B,), L + step, jnp.int32)
+            if self.recorder is not None:
+                # the step attends the prompt plus every generated token
+                # including the one being written at pos
+                self.recorder.record_step(
+                    f"decode@{L + step}", self.cfg, B, 1, L + step + 1
+                )
             logits, caches = self._decode(self.params, caches, cur, pos)
             key, sub = jax.random.split(key)
             cur = self._sample(logits, batch_reqs, sub)
@@ -145,7 +157,7 @@ class ContinuousBatchingEngine:
     """
 
     def __init__(self, cfg: ArchConfig, *, slots: int = 4, max_len: int = 128,
-                 params=None, seed: int = 0):
+                 params=None, seed: int = 0, recorder=None):
         assert cfg.family not in ("ssm", "hybrid", "audio", "vlm"), (
             "reference continuous-batching engine supports KV-cache LMs"
         )
@@ -153,6 +165,7 @@ class ContinuousBatchingEngine:
         self.api = build_model(cfg)
         self.params = params if params is not None else self.api.init(jax.random.PRNGKey(seed))
         self.max_len = max_len
+        self.recorder = recorder
         self.slots = [_Slot() for _ in range(slots)]
         self.caches = self.api.init_cache(slots, max_len)
         self.queue: list[Request] = []
@@ -171,6 +184,9 @@ class ContinuousBatchingEngine:
                 continue
             req = self.queue.pop(0)
             L = len(req.prompt)
+            if self.recorder is not None:
+                # per-slot admission prefills recompute the prompt alone
+                self.recorder.record_step(f"admit#{req.rid}[L{L}]", self.cfg, 1, L, L)
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
             logits, cache1 = self._prefill(self.params, batch)
             cache1 = T.pad_cache(cache1, self.cfg, self.max_len)
@@ -202,6 +218,14 @@ class ContinuousBatchingEngine:
         pos = jnp.asarray(
             [min(s.pos, self.max_len - 1) for s in self.slots], jnp.int32
         )
+        if self.recorder is not None:
+            # lock-step decode launches over the full slot pool; the padded
+            # batch attends up to the most advanced active position
+            kv = max(min(self.slots[i].pos, self.max_len - 1) for i in active) + 1
+            self.recorder.record_step(
+                f"tick[{len(active)}/{len(self.slots)}]",
+                self.cfg, len(self.slots), 1, kv,
+            )
         logits, self.caches = self._decode(self.params, self.caches, toks, pos)
         for i in active:
             s = self.slots[i]

@@ -1,0 +1,86 @@
+"""Serve-trace capture: record the kernel-call sequence a serving run
+actually executes, in the exact format the predict layer consumes.
+
+The serving engines execute jitted model steps; the decomposer models the
+same steps as ``KernelCall``/``CommCall`` sequences (``core.e2e``). A
+``TraceRecorder`` attached to an engine bridges the two: every executed
+prefill/decode step appends one ``(label, 1.0, model_calls(...))`` group
+with the *actual* shapes served (batch, query length, attended KV length),
+so after a run
+
+    rec = TraceRecorder()
+    eng = ServeEngine(cfg, recorder=rec)
+    ... serve ...
+    SweepPredictor(hws, estimator=pw).compare(rec.calls())
+
+prices the real workload on every hardware — the measured-vs-predicted
+protocol of the paper, driven by a live serving trace instead of a
+synthetic request shape.
+
+Recording contract (see docs/predict.md):
+
+  * one group per executed engine step, in execution order;
+  * ``B`` is the *launched* batch (the full lock-step slot pool for the
+    continuous engine, not just active slots) — kernels are priced at the
+    shapes the hardware actually runs;
+  * ``kvlen`` is the longest *attended* KV span in the step — the
+    decomposer's convention (``request_calls`` prices its Simpson decode
+    samples the same way, and causal ``kv_eff`` in ``decompose_attention``
+    assumes it), so recorded traces are directly comparable to synthetic
+    request estimates and to the hwsim oracle. Note this is the logical
+    span: the reference engines' masked decode kernel physically sweeps
+    the full padded cache, so comparisons against *this process's*
+    wall-clock (rather than the oracle) would need padded-cache pricing;
+  * labels are informational only (``prefill[...]``, ``decode@pos``,
+    ``admit#rid``, ``tick[...]``); group weights are always 1.0 — a
+    recorded step happened exactly once.
+
+The recorder is deliberately cheap: it builds the nested call groups
+(plain dataclasses) and never touches device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+from repro.core.e2e import model_calls
+
+
+@dataclasses.dataclass
+class TraceRecorder:
+    """Accumulates one nested call group per executed engine step."""
+
+    steps: list = dataclasses.field(default_factory=list)
+
+    def record_step(
+        self,
+        label: str,
+        cfg: ArchConfig,
+        B: int,
+        qlen: int,
+        kvlen: int,
+        tp: int = 1,
+    ) -> None:
+        """Record one executed step as the decomposer's call sequence for
+        its shapes (all layers + LM head, the ``model_calls`` lowering)."""
+        self.steps.append((label, 1.0, model_calls(cfg, B, qlen, kvlen, tp)))
+
+    def record(self, label: str, calls: list) -> None:
+        """Record a pre-lowered call group (escape hatch for custom steps,
+        e.g. PP boundary traffic an engine adds itself)."""
+        self.steps.append((label, 1.0, calls))
+
+    def calls(self) -> list:
+        """The recorded trace as one nested call sequence — feed directly
+        to ``Predictor.predict`` / ``SweepPredictor.predict``."""
+        return list(self.steps)
+
+    def labels(self) -> list:
+        return [label for label, _, _ in self.steps]
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.steps)
+
+    def clear(self) -> None:
+        self.steps.clear()

@@ -58,10 +58,25 @@ def test_resolve_pspec_divisibility_fallback():
 def test_param_rules_cover_all_archs():
     """Every parameter leaf of every arch resolves to a valid PartitionSpec
     on the production mesh geometry (checked symbolically on a 1x1 mesh with
-    divisibility against 16/16 sizes via a fake mesh shape)."""
+    divisibility against 16/16 sizes via a fake mesh shape) — and every leaf
+    *name* is in the audited rule set, so a new model family cannot silently
+    ride the generic matrix fallback (ISSUE 3 sharding-rule audit)."""
     from repro.configs import get_arch, list_archs
-    from repro.dist.sharding import param_pspecs
+    from repro.dist.sharding import AUDITED_PARAM_LEAVES, _path_names, param_pspecs
     from repro.models.registry import build_model
+
+    def leaf_names(shapes):
+        names = set()
+
+        def one(path, leaf):
+            # same path parsing param_pspecs itself uses, so the audit sees
+            # exactly the names the rules resolve
+            parts = _path_names(path)
+            names.add(parts[-1] if parts else "")
+            return leaf
+
+        jax.tree_util.tree_map_with_path(one, shapes)
+        return names
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     for name in list_archs():
@@ -71,6 +86,11 @@ def test_param_rules_cover_all_archs():
         specs = param_pspecs(shapes, mesh)
         leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
         assert leaves, name
+        unaudited = leaf_names(shapes) - AUDITED_PARAM_LEAVES
+        assert not unaudited, (
+            f"{name}: param leaves {sorted(unaudited)} have no audited "
+            "sharding rule — add them to dist.sharding._PARAM_RULES"
+        )
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,311 @@
+"""Multi-hardware sweep + serve-trace capture (ISSUE 3): sweep results
+equal independent per-hw predicts, task-signature featurize sharing is
+provably safe across every registry entry, and an engine's recorded trace
+round-trips through the predict layer."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.dataset import build_dataset, featurize, sample_workload
+from repro.core.e2e import model_calls, request_calls, request_estimate, request_sweep
+from repro.core.estimator import train_pipeweave
+from repro.core.hardware import REGISTRY, get_hw
+from repro.predict import (
+    FeatureCache,
+    SweepPredictor,
+    get_predictor,
+    group_calls,
+    task_sig,
+)
+
+SWEEP_HWS = ["tpu-v5e", "tpu-v4", "tpu-v5p", "tpu-v6e", "tpu-v5e-16", "tpu-v7p"]
+
+
+@pytest.fixture(scope="module")
+def pw():
+    ds = {
+        "gemm": build_dataset("gemm", n_workloads=15, seed=3),
+        "rmsnorm": build_dataset("rmsnorm", n_workloads=10, seed=4),
+    }
+    return train_pipeweave(ds, max_epochs=10)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    cfg = get_arch("qwen3-0.6b")
+    return [
+        (f"decode@{64 + i}", 1.0, model_calls(cfg, 4, 1, 64 + i, tp=1))
+        for i in range(6)
+    ]
+
+
+# ----------------------------------------------------------------------
+# sweep == independent per-hw predicts
+# ----------------------------------------------------------------------
+
+
+def test_sweep_matches_independent_predicts(pw, trace):
+    sp = SweepPredictor(SWEEP_HWS, estimator=pw, fallback="oracle")
+    res = sp.predict(trace)
+    assert list(res) == SWEEP_HWS and len(res) == len(SWEEP_HWS)
+    for name in SWEEP_HWS:
+        ind = get_predictor(
+            "synperf", get_hw(name), estimator=pw, fallback="oracle"
+        ).predict(trace)
+        assert np.isclose(res[name].total_s, ind.total_s, rtol=1e-9), name
+        for fam, t in ind.by_family.items():
+            assert np.isclose(res[name].by_family[fam], t, rtol=1e-9), (name, fam)
+
+
+def test_sweep_roofline_matches_independent_full_registry(trace):
+    """No-training variant over every registry entry (incl. workqueue
+    scheduling via fused_moe elsewhere covered by task_sig test)."""
+    sp = SweepPredictor(backend="roofline")  # default: whole registry
+    res = sp.predict(trace)
+    assert set(res) == set(REGISTRY)
+    for name in REGISTRY:
+        ind = get_predictor("roofline", get_hw(name)).predict(trace)
+        assert np.isclose(res[name].total_s, ind.total_s, rtol=1e-9), name
+
+
+def test_sweep_rejects_bad_hw_lists():
+    with pytest.raises(ValueError, match="duplicate"):
+        SweepPredictor(["tpu-v5e", "tpu-v5e"], backend="roofline")
+    with pytest.raises(ValueError, match="at least one"):
+        SweepPredictor([], backend="roofline")
+    with pytest.raises(KeyError):
+        SweepPredictor(["not-a-tpu"], backend="roofline")
+
+
+# ----------------------------------------------------------------------
+# task-signature sharing
+# ----------------------------------------------------------------------
+
+
+def test_task_sig_matches_direct_featurize():
+    """The shared-task cache path must reproduce ``featurize`` exactly for
+    every kernel family on every registry entry — this pins ``task_sig`` to
+    the hw fields decompose/schedule actually read."""
+    rng = np.random.default_rng(5)
+    cache = FeatureCache()
+    for kind in ("gemm", "attention", "rmsnorm", "silu_mul", "scaled_mm", "fused_moe"):
+        X = sample_workload(kind, rng)
+        for hw in REGISTRY.values():
+            fs = cache.featureset(kind, X, hw)
+            direct = featurize(kind, X, hw)
+            assert fs.theoretical_s == direct.theoretical_s, (kind, hw.name)
+            assert np.array_equal(fs.vector(hw), direct.vector(hw)), (kind, hw.name)
+    # and sharing actually happened: fewer task builds than featuresets
+    assert cache.task_misses < cache.misses
+    assert cache.task_hits == cache.misses - cache.task_misses
+
+
+def test_task_cache_shares_across_same_signature_hw():
+    """rmsnorm's decompose ignores hw and static scheduling reads only
+    num_chips — two 8-chip devices must share one task build."""
+    cache = FeatureCache()
+    X = {"seq": 512, "dim": 2048}
+    a, b = get_hw("tpu-v5e"), get_hw("tpu-v6e")  # both 8 chips
+    assert task_sig("rmsnorm", a) == task_sig("rmsnorm", b)
+    cache.featureset("rmsnorm", X, a)
+    cache.featureset("rmsnorm", X, b)
+    assert cache.task_misses == 1 and cache.task_hits == 1
+    assert cache.misses == 2  # analyze still runs per hw
+    # a 4-chip device has a different signature -> new task build
+    cache.featureset("rmsnorm", X, get_hw("tpu-v4i"))
+    assert cache.task_misses == 2
+
+
+def test_gemm_task_sig_tracks_tile_heuristic_inputs():
+    """gemm decompose reads (vmem_mb, num_chips); hardware differing in
+    either must not share tasks."""
+    a, b = get_hw("tpu-v5e"), get_hw("tpu-v5p")  # same vmem + chips
+    assert task_sig("gemm", a) == task_sig("gemm", b)
+    c = get_hw("tpu-v7p")  # 256 MB vmem
+    assert task_sig("gemm", a) != task_sig("gemm", c)
+    d = get_hw("tpu-v5e-16")  # 16 chips
+    assert task_sig("gemm", a) != task_sig("gemm", d)
+
+
+def test_workqueue_task_sig_includes_throughputs():
+    """fused_moe scheduling weighs tasks by pipe throughputs — equal chip
+    counts with different FLOPs must not share a schedule."""
+    a, b = get_hw("tpu-v5e"), get_hw("tpu-v6e")
+    assert task_sig("fused_moe", a) != task_sig("fused_moe", b)
+
+
+def test_sweep_shares_grouping_and_tasks(pw, trace):
+    """One sweep groups once and re-warms nothing on a second pass."""
+    sp = SweepPredictor(SWEEP_HWS, estimator=pw, fallback="oracle")
+    sp.predict(trace)
+    families, _ = group_calls(trace)
+    n_shapes = sum(len(g.workloads) for g in families.values())
+    # feature-level entries fan out per hw; task-level entries are shared
+    # across equal signatures, so strictly fewer than shapes x hw
+    assert sp.cache.misses == n_shapes * len(SWEEP_HWS)
+    assert sp.cache.task_misses < n_shapes * len(SWEEP_HWS)
+    before = (sp.cache.misses, sp.cache.task_misses)
+    sp.predict(trace)  # fully warm: no new featurize or task work
+    assert (sp.cache.misses, sp.cache.task_misses) == before
+
+
+# ----------------------------------------------------------------------
+# request-level sweep + comparison protocol
+# ----------------------------------------------------------------------
+
+
+def test_request_sweep_matches_request_estimate(pw):
+    cfg = get_arch("qwen3-0.6b")
+    res = request_sweep(cfg, 2, 64, 8, tp=1, pp=2, hws=SWEEP_HWS,
+                        estimator=pw, fallback="oracle")
+    for name in SWEEP_HWS:
+        ind = request_estimate(
+            cfg, 2, 64, 8, tp=1, pp=2,
+            predictor=get_predictor("synperf", get_hw(name), estimator=pw,
+                                    fallback="oracle"),
+        )
+        # same calls, same pp bubble surcharge
+        assert np.isclose(res[name].total_s, ind.total_s, rtol=1e-9), name
+        assert res[name].comm_s > 0  # pp boundary traffic priced
+
+
+def test_prebuilt_predictors_must_be_keyed_by_hw_name():
+    with pytest.raises(ValueError, match="key the mapping by hw name"):
+        SweepPredictor(predictors={"v5e": get_predictor("oracle", get_hw("tpu-v5e"))})
+    sp = SweepPredictor(predictors={"tpu-v5e": get_predictor("oracle", get_hw("tpu-v5e"))})
+    assert sp.hw_names == ["tpu-v5e"]
+    est = sp.predict([("g", 1.0, model_calls(get_arch("qwen3-0.6b"), 1, 1, 8, 1))])
+    assert est["tpu-v5e"].total_s > 0
+
+
+def test_audio_decode_steps_do_not_reprice_encoder():
+    """The audio encoder runs once at prefill; decode-step groups (qlen=1)
+    must not contain it (TraceRecorder ticks would otherwise inflate every
+    generated token by the full encoder stack)."""
+    cfg = get_arch("whisper-base")
+    labels_prefill = [g[0] for g in model_calls(cfg, 2, cfg.enc_frames, cfg.enc_frames, 1)]
+    labels_decode = [g[0] for g in model_calls(cfg, 2, 1, 64, 1)]
+    assert "encoder" in labels_prefill
+    assert "encoder" not in labels_decode
+
+
+def test_request_sweep_rejects_ambiguous_arguments(pw):
+    cfg = get_arch("qwen3-0.6b")
+    sp = SweepPredictor(SWEEP_HWS[:2], backend="oracle")
+    with pytest.raises(TypeError, match="not both"):
+        request_sweep(cfg, 2, 64, 8, hws=SWEEP_HWS, sweep=sp)
+    with pytest.raises(TypeError, match="not both"):
+        request_sweep(cfg, 2, 64, 8, sweep=sp, backend="oracle")
+
+
+def test_compare_all_unseen_sweep_has_no_nan_rows(trace):
+    """An all-unseen sweep must omit the seen mean instead of printing
+    nan% (and vice versa)."""
+    sp = SweepPredictor(["tpu-v6e", "tpu-v7p"], backend="roofline")
+    cmp = sp.compare(trace)
+    table = cmp.table()
+    assert "nan" not in table
+    assert "unseen" in table
+    split = cmp.split_mape()
+    assert np.isnan(split["seen"]) and np.isfinite(split["unseen"])
+
+
+def test_compare_seen_unseen_protocol(trace):
+    """roofline vs oracle comparison over both splits: every row finite,
+    split MAPEs aggregate the right hardware."""
+    sp = SweepPredictor(SWEEP_HWS, backend="roofline")
+    cmp = sp.compare(trace)
+    assert set(cmp.totals) == set(SWEEP_HWS)
+    for name, (m, p) in cmp.totals.items():
+        assert m > 0 and p > 0, name
+        assert np.isfinite(cmp.err_pct(name))
+    split = cmp.split_mape()
+    seen = [n for n in SWEEP_HWS if REGISTRY[n].seen]
+    unseen = [n for n in SWEEP_HWS if not REGISTRY[n].seen]
+    assert np.isclose(split["seen"], np.mean([cmp.err_pct(n) for n in seen]))
+    assert np.isclose(split["unseen"], np.mean([cmp.err_pct(n) for n in unseen]))
+    fams = cmp.family_mape()
+    assert set(fams) == {"gemm", "attention", "rmsnorm", "silu_mul"}
+    assert sp.predictors[SWEEP_HWS[0]].name == "roofline"
+    # tables render without error and carry one line per hw
+    assert len(cmp.table().splitlines()) >= len(SWEEP_HWS) + 2
+
+
+def test_sweep_result_table_and_totals(trace):
+    res = SweepPredictor(SWEEP_HWS, backend="oracle").predict(trace)
+    totals = res.totals()
+    assert set(totals) == set(SWEEP_HWS)
+    assert all(v > 0 for v in totals.values())
+    lines = res.table().splitlines()
+    assert len(lines) == len(SWEEP_HWS) + 1  # header + one row per hw
+    scaled = res.scaled(2.0)
+    assert np.isclose(scaled[SWEEP_HWS[0]].total_s, 2 * res[SWEEP_HWS[0]].total_s)
+
+
+# ----------------------------------------------------------------------
+# serve-trace capture round-trip (tiny configs on CPU)
+# ----------------------------------------------------------------------
+
+
+def test_trace_recorder_roundtrip_serve_engine():
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.trace import TraceRecorder
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    rec = TraceRecorder()
+    eng = ServeEngine(cfg, max_batch=2, recorder=rec)
+    eng.submit(Request(rid=0, prompt=np.arange(1, 13, dtype=np.int32), max_new=3))
+    results = eng.step_batch()
+    assert len(results) == 1 and len(results[0].tokens) == 3
+    # one prefill + (max_new - 1) decode steps, in execution order
+    assert rec.labels() == ["prefill[b1xL12]", "decode@12", "decode@13"]
+    assert rec.n_steps == 3
+
+    # the recorded groups are exactly the decomposer's lowering of the
+    # executed shapes, so the priced trace equals hand-built model_calls
+    oracle = get_predictor("oracle", get_hw("tpu-v5e"))
+    est = oracle.predict(rec.calls())
+    manual = [
+        ("prefill", 1.0, model_calls(cfg, 1, 12, 12, 1)),
+        ("d0", 1.0, model_calls(cfg, 1, 1, 13, 1)),
+        ("d1", 1.0, model_calls(cfg, 1, 1, 14, 1)),
+    ]
+    ref = oracle.predict(manual)
+    assert np.isclose(est.total_s, ref.total_s, rtol=1e-12)
+    assert est.n_kernel_calls == ref.n_kernel_calls
+
+    rec.clear()
+    assert rec.n_steps == 0 and rec.calls() == []
+
+
+def test_trace_recorder_roundtrip_continuous_engine():
+    from repro.serve.engine import ContinuousBatchingEngine, Request
+    from repro.serve.trace import TraceRecorder
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    rec = TraceRecorder()
+    eng = ContinuousBatchingEngine(cfg, slots=2, max_len=48, recorder=rec)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=np.arange(1, 10, dtype=np.int32), max_new=2))
+    out = eng.run_to_completion()
+    assert sorted(r.rid for r in out) == [0, 1, 2]
+    labels = rec.labels()
+    # per-slot admission prefills + lock-step decode ticks over the pool
+    assert labels.count("admit#0[L9]") == 1
+    assert labels.count("admit#2[L9]") == 1
+    assert any(l.startswith("tick[") for l in labels)
+
+    # a recorded trace feeds the sweep directly (engine -> trace -> predict)
+    res = SweepPredictor(["tpu-v5e", "tpu-v6e"], backend="oracle").predict(rec.calls())
+    assert res["tpu-v5e"].total_s > 0 and res["tpu-v6e"].total_s > 0
+
+
+def test_trace_recorder_untracked_engine_records_nothing():
+    """recorder=None engines must not pay any tracing cost or state."""
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    eng = ServeEngine(cfg, max_batch=1)
+    assert eng.recorder is None
+    eng.submit(Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32), max_new=2))
+    assert len(eng.step_batch()) == 1
