@@ -23,6 +23,7 @@ MODULES = [
     ("fig8_table10_perf_gap", "benchmarks.bench_perf_gap"),
     ("table9_e2e", "benchmarks.bench_e2e"),
     ("sweep", "benchmarks.bench_sweep"),
+    ("placement", "benchmarks.bench_placement"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

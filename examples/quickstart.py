@@ -10,9 +10,13 @@
    oracle — nothing falls back silently);
 4. (``--sweep``) price the same request across the whole hardware
    registry in one ``request_sweep`` pass and score it against the oracle
-   over the paper's seen/unseen generalization split.
+   over the paper's seen/unseen generalization split;
+5. (``--route``) close the loop: rank the fleet for the request with
+   ``place_request`` under the latency and cost objectives (the
+   registry's ``usd_per_chip_hour`` prices) and print who wins each.
 
-Run: PYTHONPATH=src python examples/quickstart.py [--n-workloads 120] [--sweep]
+Run: PYTHONPATH=src python examples/quickstart.py [--n-workloads 120]
+     [--sweep] [--route]
 """
 import argparse
 
@@ -20,14 +24,15 @@ import numpy as np
 
 from repro.core import hwsim
 from repro.core.dataset import build_dataset, featurize, mape, SEEN, UNSEEN
-from repro.core.e2e import request_calls, request_estimate, request_sweep
+from repro.core.e2e import place_request, request_calls, request_estimate, request_sweep
 from repro.core.estimator import train_pipeweave
 from repro.core.hardware import get_hw
 from repro.configs import get_arch
 from repro.predict import SweepPredictor, get_predictor
 
 
-def main(n_workloads: int = 120, max_epochs: int = 250, sweep: bool = False):
+def main(n_workloads: int = 120, max_epochs: int = 250, sweep: bool = False,
+         route: bool = False):
     hw_seen = get_hw("tpu-v5e")
     hw_unseen = get_hw("tpu-v6e")
 
@@ -82,6 +87,19 @@ def main(n_workloads: int = 120, max_epochs: int = 250, sweep: bool = False):
         print("\n  measured (oracle) vs predicted:")
         print(cmp.table())
 
+    # --- 5. fleet placement (optional) -----------------------------------
+    if route:
+        print("\n== placement: which hardware should serve this request? ==")
+        from repro.serve.placement import FleetRouter
+
+        router = FleetRouter(estimator=pw, fallback="oracle")
+        by_lat = place_request(cfg, 8, 982, 64, objective="latency", router=router)
+        print(by_lat.table())
+        by_cost = place_request(cfg, 8, 982, 64, objective="cost", router=router)
+        print(f"  fastest: {by_lat.best}   cheapest: {by_cost.best}  "
+              f"(${by_cost.rows[0].cost_usd:.3g} vs "
+              f"${by_cost[by_lat.best].cost_usd:.3g} on the fastest)")
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -91,5 +109,9 @@ if __name__ == "__main__":
     ap.add_argument("--sweep", action="store_true",
                     help="also price the E2E request on every registry "
                          "hardware (seen/unseen generalization table)")
+    ap.add_argument("--route", action="store_true",
+                    help="also rank the fleet for the request under the "
+                         "latency and cost objectives (place_request)")
     args = ap.parse_args()
-    main(n_workloads=args.n_workloads, max_epochs=args.max_epochs, sweep=args.sweep)
+    main(n_workloads=args.n_workloads, max_epochs=args.max_epochs,
+         sweep=args.sweep, route=args.route)

@@ -7,8 +7,9 @@ collective calls of TP/EP/PP. Latency estimation is delegated to a
 ``repro.predict`` backend: ``request_estimate(cfg, ..., predictor=p)``
 returns an ``Estimate`` with the total plus per-family/per-op breakdown and
 the analytical ceiling; ``step_time``/``request_latency`` are the scalar
-views and ``request_sweep`` prices the same request on many hardware at
-once (``repro.predict.sweep``). The legacy ``kernel_time``/``comm_time``
+views, ``request_sweep`` prices the same request on many hardware at
+once (``repro.predict.sweep``), and ``place_request`` ranks the fleet for
+it under a placement objective (``repro.serve.placement``). The legacy ``kernel_time``/``comm_time``
 two-lambda kwargs are kept as a deprecation shim (wrapped in
 ``CallableTimesPredictor``).
 
@@ -38,7 +39,7 @@ from repro.core.hardware import TPUSpec
 from repro.predict.api import CommCall, Estimate, KernelCall  # noqa: F401
 from repro.predict.backends import CallableTimesPredictor, get_predictor
 from repro.predict.comm import CommRegressor  # noqa: F401
-from repro.predict.sweep import SweepPredictor, SweepResult
+from repro.predict.sweep import SweepPredictor, SweepResult, check_prebuilt_exclusive
 
 
 def _gemm(M, N, K, count=1):
@@ -214,6 +215,12 @@ def request_calls(
 # ----------------------------------------------------------------------
 
 
+def _pp_bubble(pp: int) -> float:
+    """GPipe fill/drain bubble surcharge factor for a single request
+    spanning ``pp`` stages (1.0 when not pipelined)."""
+    return 1.0 + 0.5 * (pp - 1) / pp if pp > 1 else 1.0
+
+
 def _resolve_predictor(predictor, kernel_time, comm_time):
     if predictor is not None:
         if kernel_time is not None or comm_time is not None:
@@ -258,7 +265,7 @@ def request_estimate(
     pred = _resolve_predictor(predictor, kernel_time, comm_time)
     est = pred.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp))
     if pp > 1:
-        est = est.scaled(1.0 + 0.5 * (pp - 1) / pp)  # bubble (single request)
+        est = est.scaled(_pp_bubble(pp))  # bubble (single request)
     return est
 
 
@@ -274,16 +281,36 @@ def request_sweep(
     Pass a prebuilt ``sweep=SweepPredictor(...)`` to amortize backend
     construction and cache warmth across requests; otherwise ``backend`` +
     ``**backend_kw`` construct one per call (e.g. ``estimator=pw``)."""
-    if sweep is not None and (hws is not None or backend != "synperf" or backend_kw):
-        raise TypeError(
-            "pass either sweep= (a prebuilt SweepPredictor) or "
-            "hws=/backend=/backend kwargs, not both"
-        )
+    check_prebuilt_exclusive("sweep", sweep, hws, backend, backend_kw)
     sp = sweep if sweep is not None else SweepPredictor(hws, backend, **backend_kw)
     res = sp.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp))
     if pp > 1:
-        res = res.scaled(1.0 + 0.5 * (pp - 1) / pp)  # same bubble surcharge
+        res = res.scaled(_pp_bubble(pp))  # same bubble surcharge
     return res
+
+
+def place_request(
+    cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
+    objective="latency", hws=None, backend: str = "synperf", router=None,
+    **backend_kw,
+):
+    """Route one synthetic request across the hardware fleet: assemble the
+    same call sequence as ``request_estimate`` (prefill + Simpson decode +
+    PP boundary traffic, bubble surcharge included) and rank every fleet
+    entry under ``objective`` (see ``repro.predict.objective``).
+
+    Returns a ``repro.serve.placement.Placement``. Pass a prebuilt
+    ``router=FleetRouter(...)`` to amortize backend construction and cache
+    warmth across requests (``hws``/``backend``/kwargs then stay unset);
+    ``n_tokens`` for per-token objectives is the generated-token count
+    ``B * lout``."""
+    from repro.serve.placement import FleetRouter
+
+    check_prebuilt_exclusive("router", router, hws, backend, backend_kw)
+    rt = router if router is not None else FleetRouter(hws, backend, **backend_kw)
+    calls = request_calls(cfg, B, lin, lout, tp=tp, pp=pp)
+    return rt.route(calls, objective=objective, n_tokens=B * lout,
+                    scale=_pp_bubble(pp))
 
 
 def request_latency(

@@ -32,7 +32,14 @@ from repro.predict.api import (
 )
 from repro.predict.batching import FeatureCache, canonical_x, group_calls, task_sig
 from repro.predict.comm import CommRegressor
-from repro.predict.sweep import SweepComparison, SweepPredictor, SweepResult
+from repro.predict.objective import (
+    OBJECTIVES,
+    Objective,
+    UnpricedHardwareError,
+    get_objective,
+    trace_cost_usd,
+)
+from repro.predict.sweep import SweepComparison, SweepPredictor, SweepResult, hw_split
 from repro.predict.backends import (
     PREDICTORS,
     BaselinePredictor,
@@ -50,8 +57,11 @@ __all__ = [
     "Estimate",
     "FeatureCache",
     "KernelCall",
+    "OBJECTIVES",
+    "Objective",
     "PREDICTORS",
     "Predictor",
+    "UnpricedHardwareError",
     "UntrainedFamilyError",
     "BaselinePredictor",
     "BasePredictor",
@@ -64,7 +74,10 @@ __all__ = [
     "SynPerfPredictor",
     "canonical_x",
     "flatten_calls",
+    "get_objective",
     "get_predictor",
     "group_calls",
+    "hw_split",
     "task_sig",
+    "trace_cost_usd",
 ]

@@ -31,7 +31,7 @@ from typing import Iterable, Optional
 import numpy as np
 
 from repro.core.hardware import REGISTRY, TPUSpec, get_hw
-from repro.predict.api import Estimate
+from repro.predict.api import CommCall, Estimate, KernelCall
 from repro.predict.batching import FeatureCache, group_calls
 
 
@@ -49,9 +49,25 @@ def _resolve_hws(hws) -> list[TPUSpec]:
     return out
 
 
-def _split(name: str) -> str:
+def check_prebuilt_exclusive(name: str, prebuilt, hws, backend: str, backend_kw) -> None:
+    """Shared guard for the ``sweep=``/``router=`` convenience kwargs:
+    a prebuilt object already carries its hardware list and backends, so
+    combining it with construction kwargs is ambiguous and refused."""
+    if prebuilt is not None and (hws is not None or backend != "synperf" or backend_kw):
+        raise TypeError(
+            f"pass either {name}= (a prebuilt object) or "
+            "hws=/backend=/backend kwargs, not both"
+        )
+
+
+def hw_split(name: str) -> str:
+    """``"seen"`` / ``"unseen"`` for registry entries (the paper's
+    training/held-out hardware split), ``"?"`` for off-registry specs."""
     spec = REGISTRY.get(name)
     return "?" if spec is None else ("seen" if spec.seen else "unseen")
+
+
+_split = hw_split  # backward-compatible private alias
 
 
 @dataclasses.dataclass
@@ -96,30 +112,45 @@ class SweepResult:
 @dataclasses.dataclass
 class SweepComparison:
     """Measured-vs-predicted over a sweep: one row per (hw, family) plus
-    per-request totals — the data behind the paper's Table IX layout."""
+    per-request totals — the data behind the paper's Table IX layout.
 
-    #: hw name -> family -> (measured_s, predicted_s)
+    All latencies are **seconds for the whole compared trace** (the sum of
+    every recorded/weighted step), not per-step or per-token values;
+    "measured" means the ``reference`` backend of :meth:`SweepPredictor
+    .compare` (default: the hwsim oracle), not this process's wall-clock.
+    """
+
+    #: hw name -> family -> (measured_s, predicted_s), trace totals
     by_family: dict
-    #: hw name -> (measured_total_s, predicted_total_s)
+    #: hw name -> (measured_total_s, predicted_total_s), trace totals
     totals: dict
 
     def err_pct(self, hw_name: str) -> float:
+        """Absolute relative total-latency error for one hardware, in
+        percent (``|predicted - measured| / measured * 100``)."""
         m, p = self.totals[hw_name]
         return abs(p - m) / max(m, 1e-12) * 100.0
 
     def split_mape(self) -> dict:
-        """Mean absolute total-latency error (%) over the seen vs unseen
-        hardware split — the generalization headline numbers."""
+        """``{"seen": ..., "unseen": ...}`` mean absolute total-latency
+        error in **percent** over the registry's seen/unseen hardware
+        split — the generalization headline numbers. Each hardware
+        contributes its whole-trace :meth:`err_pct` (an error on totals,
+        not a mean of per-kernel errors); off-registry specs (split
+        ``"?"``) are excluded, and an empty split is ``nan`` — callers
+        like :meth:`table` must omit it rather than print ``nan%``."""
         out = {"seen": [], "unseen": []}
         for name in self.totals:
-            split = _split(name)
+            split = hw_split(name)
             if split != "?":
                 out[split].append(self.err_pct(name))
         return {k: float(np.mean(v)) if v else float("nan") for k, v in out.items()}
 
     def family_mape(self) -> dict:
-        """family -> mean |err|% across all swept hardware (kernel-level
-        error per family, the Table VIII analogue)."""
+        """``{family: error_pct}`` — mean absolute error in **percent** of
+        each kernel family's *per-trace total seconds*, averaged across
+        all swept hardware (the Table VIII analogue). Comm ops are not
+        included: only kernel families appear in ``by_family``."""
         errs: dict = {}
         for fams in self.by_family.values():
             for fam, (m, p) in fams.items():
@@ -150,7 +181,22 @@ class SweepPredictor:
     ``get_predictor`` per hardware — e.g. ``estimator=pw`` for "synperf"
     (the estimator is hw-independent and shared). A ``predictors`` mapping
     of pre-built backends overrides construction entirely (they should
-    share a cache to benefit from the sweep)."""
+    share a cache to benefit from the sweep).
+
+    Conventions (shared with ``docs/predict.md``):
+
+      * every returned latency is **seconds for the whole priced trace**;
+        per-step views come from :meth:`predict_steps`;
+      * traces are call sequences — flat ``KernelCall``/``CommCall`` lists
+        or nested ``(label, repetitions, sub_sequence)`` groups. Workload
+        shapes are the *launched* shapes (padded batch) with the longest
+        **attended** KV span per step — the decomposer's convention, which
+        ``TraceRecorder`` follows, so recorded traces, synthetic
+        ``request_calls`` and the hwsim oracle are mutually comparable;
+      * the sweep is exact: per-hw results equal independent
+        ``get_predictor(backend, hw).predict(trace)`` calls
+        (``tests/test_sweep.py`` pins this at 1e-9 relative) — sharing
+        only removes redundant work, never approximates."""
 
     def __init__(
         self,
@@ -199,6 +245,41 @@ class SweepPredictor:
                 for hw in self.hws
             }
         )
+
+    def predict_steps(self, calls) -> dict:
+        """Per-step estimates across the sweep: ``{hw name: [(label,
+        Estimate), ...]}`` with one entry per *top-level* group of
+        ``calls`` (a ``TraceRecorder`` trace has one group per executed
+        engine step; bare calls between groups are folded into an
+        anonymous ``"calls"`` step).
+
+        This is the per-step view the placement layer builds on (e.g.
+        pricing prefill-class vs decode-class steps separately), and it is
+        cheap by construction: every step shares this sweep's
+        ``FeatureCache``, so the decompose/schedule/demand levels are
+        warmed once per unique shape no matter how many steps repeat it —
+        only the per-step grouping pass and the (memoized) feature lookups
+        fan out. Estimates are per *single execution* of each step times
+        its group repetition count, in trace order."""
+        steps: list = []
+        loose: list = []
+        for item in calls:
+            if isinstance(item, (KernelCall, CommCall)):
+                loose.append(item)
+            else:
+                if loose:
+                    steps.append(("calls", 1.0, loose))
+                    loose = []
+                steps.append(item)
+        if loose:
+            steps.append(("calls", 1.0, loose))
+        out: dict = {hw.name: [] for hw in self.hws}
+        for label, reps, seq in steps:
+            families, comms = group_calls([(label, reps, seq)])
+            for hw in self.hws:
+                est = self.predictors[hw.name].predict_grouped(families, comms)
+                out[hw.name].append((label, est))
+        return out
 
     def compare(self, calls, *, reference: str = "oracle") -> SweepComparison:
         """Measured (``reference`` backend, default the hwsim oracle) vs

@@ -1,2 +1,3 @@
-"""Serving engine: continuous batching over prefill/decode steps, plus
-trace capture (``serve.trace``) feeding the predict layer."""
+"""Serving: continuous batching over prefill/decode steps, trace capture
+(``serve.trace``) feeding the predict layer, and prediction-guided fleet
+placement (``serve.placement``)."""

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -89,7 +90,9 @@ class ServeEngine:
 
         t0 = time.perf_counter()
         if self.recorder is not None:
-            self.recorder.record_step(f"prefill[b{B}xL{L}]", self.cfg, B, L, L)
+            self.recorder.record_step(
+                f"prefill[b{B}xL{L}]", self.cfg, B, L, L, phase="prefill"
+            )
         batch = {"tokens": toks, **self._extra_inputs(B, jax.random.PRNGKey(1))}
         logits, caches = self._prefill(self.params, batch)
         caches = T.pad_cache(caches, self.cfg, L + max_new)
@@ -106,9 +109,16 @@ class ServeEngine:
             pos = jnp.full((B,), L + step, jnp.int32)
             if self.recorder is not None:
                 # the step attends the prompt plus every generated token
-                # including the one being written at pos
+                # including the one being written at pos; `active` counts
+                # the sequences that still accept a token this tick
+                # (shorter-max_new rows ride along in the padded batch)
+                still = sum(
+                    1 for i in range(B)
+                    if len(outputs[i]) < batch_reqs[i].max_new
+                )
                 self.recorder.record_step(
-                    f"decode@{L + step}", self.cfg, B, 1, L + step + 1
+                    f"decode@{L + step}", self.cfg, B, 1, L + step + 1,
+                    phase="decode", active=still,
                 )
             logits, caches = self._decode(self.params, caches, cur, pos)
             key, sub = jax.random.split(key)
@@ -150,6 +160,42 @@ class ContinuousBatchingEngine:
     of the shared KV cache). This is the vLLM/Orca-style scheduler shape on
     top of the same pjit-able decode step.
 
+    Shape conventions (they matter for anything consuming traces or
+    predictions of this engine):
+
+      * every decode tick launches the **full padded slot pool** — the
+        launched batch is ``slots`` regardless of how many are active, and
+        a tick generates one token per *active* slot;
+      * the *attended* KV span of a tick is ``max(active positions) + 1``
+        (the logical work the decomposer and the hwsim oracle price); the
+        reference masked decode kernel physically sweeps the padded cache,
+        so wall-clock of this CPU process is not the modeled latency;
+      * all latencies in the admission machinery are **seconds predicted
+        on the admission predictor's hardware**, not host wall-clock —
+        this engine is a functional reference, the predictor is the model
+        of the serving fleet.
+
+    Admission policy (``admission=``):
+
+      * ``"fixed"`` (default): admit whenever a slot is free — the classic
+        fixed slot-count heuristic;
+      * ``"predicted"``: before each admission, ask ``predictor`` (any
+        ``repro.predict`` backend) for the decode-tick latency of the
+        would-be batch at its **worst-case future KV span** (every active
+        slot and the candidate projected to their final positions), and
+        admit only while that stays within ``decode_slo_s``. Predicted
+        latency grows with the KV span (up to scheduler-quantization
+        wiggle of a fraction of a percent — size the SLO with that
+        margin), so a request admitted under the SLO keeps every
+        subsequent tick under it too. A request that violates the
+        SLO even alone in the pool is admitted anyway with a warning
+        (progress guarantee; counted in ``slo_forced_admits``). If the
+        predictor cannot price a step (unfitted comm regressor, untrained
+        kernel family under ``fallback="error"``), the engine warns once
+        and falls back cleanly to fixed admission
+        (``admission_fallback_reason``). Decisions are logged in
+        ``admission_log`` (one dict per considered candidate).
+
     Implementation notes for the single-process reference: the shared cache
     is (B_slots, max_len, ...); per-slot prefill recomputes the prompt with
     the slot's row batched alone and writes its KV into the slot row
@@ -157,15 +203,33 @@ class ContinuousBatchingEngine:
     """
 
     def __init__(self, cfg: ArchConfig, *, slots: int = 4, max_len: int = 128,
-                 params=None, seed: int = 0, recorder=None):
+                 params=None, seed: int = 0, recorder=None,
+                 admission: str = "fixed", predictor=None,
+                 decode_slo_s: Optional[float] = None):
         assert cfg.family not in ("ssm", "hybrid", "audio", "vlm"), (
             "reference continuous-batching engine supports KV-cache LMs"
         )
+        if admission not in ("fixed", "predicted"):
+            raise ValueError(f"admission must be 'fixed' or 'predicted', got {admission!r}")
+        if admission == "predicted" and (predictor is None or decode_slo_s is None):
+            raise ValueError(
+                "admission='predicted' needs predictor= (a repro.predict "
+                "backend for the target hardware) and decode_slo_s= (the "
+                "per-tick decode latency SLO in predicted seconds)"
+            )
         self.cfg = cfg
         self.api = build_model(cfg)
         self.params = params if params is not None else self.api.init(jax.random.PRNGKey(seed))
         self.max_len = max_len
         self.recorder = recorder
+        self.admission = admission
+        self.predictor = predictor
+        self.decode_slo_s = decode_slo_s
+        #: one dict per admission decision: rid, projected kv, predicted_s,
+        #: slo_s, admitted, forced (admitted despite violating, alone in pool)
+        self.admission_log: list[dict] = []
+        self.slo_forced_admits = 0
+        self.admission_fallback_reason: Optional[str] = None
         self.slots = [_Slot() for _ in range(slots)]
         self.caches = self.api.init_cache(slots, max_len)
         self.queue: list[Request] = []
@@ -178,15 +242,91 @@ class ContinuousBatchingEngine:
         self.queue.append(req)
 
     # ------------------------------------------------------------------
+    # predicted admission
+
+    def _projected_kv(self, req: Request) -> int:
+        """Worst-case attended KV span of any future tick of the would-be
+        batch: every active slot and the candidate projected to their
+        final write positions (conservative within one token). Predicted
+        tick latency grows with this span (modulo sub-percent scheduler
+        quantization), so one check at admission covers the request's
+        whole residency."""
+        cap = self.max_len - 1
+        spans = [min(len(req.prompt) + req.max_new, cap)]
+        for s in self.slots:
+            if not s.free:
+                spans.append(min(s.pos + max(s.req.max_new - len(s.emitted), 0), cap))
+        return max(spans) + 1
+
+    def _predicted_tick_s(self, kv: int) -> Optional[float]:
+        """Predicted decode-tick latency (seconds on the predictor's
+        hardware) for the full slot pool attending ``kv``; None when the
+        predictor cannot price the step (the engine has then already
+        fallen back to fixed admission)."""
+        from repro.core.e2e import model_calls
+
+        try:
+            return self.predictor.predict(
+                model_calls(self.cfg, len(self.slots), 1, kv, tp=1)
+            ).total_s
+        except RuntimeError as e:  # unfitted estimator / comm regressor
+            self.admission_fallback_reason = f"{type(e).__name__}: {e}"
+            self.admission = "fixed"
+            warnings.warn(
+                f"predicted admission unavailable ({e}); falling back to "
+                "fixed slot admission",
+                stacklevel=4,
+            )
+            return None
+
+    def _admit_ok(self, req: Request) -> bool:
+        """One admission decision under the predicted policy (always True
+        for fixed admission). Logged in ``admission_log``."""
+        if self.admission != "predicted":
+            return True
+        kv = self._projected_kv(req)
+        pred = self._predicted_tick_s(kv)
+        if pred is None:
+            return True  # fell back to fixed admission mid-run
+        ok = pred <= self.decode_slo_s
+        forced = False
+        if not ok and all(s.free for s in self.slots):
+            # the request violates the SLO even alone: admit anyway so the
+            # queue cannot deadlock, but say so loudly
+            forced, ok = True, True
+            self.slo_forced_admits += 1
+            warnings.warn(
+                f"request {req.rid} cannot meet decode_slo_s="
+                f"{self.decode_slo_s:.4g}s even alone in the pool "
+                f"(predicted {pred:.4g}s); admitting anyway",
+                stacklevel=3,
+            )
+        self.admission_log.append(
+            {
+                "rid": req.rid,
+                "kv": kv,
+                "predicted_s": pred,
+                "slo_s": self.decode_slo_s,
+                "admitted": ok,
+                "forced": forced,
+            }
+        )
+        return ok
+
+    # ------------------------------------------------------------------
     def _admit(self):
         for i, slot in enumerate(self.slots):
             if not slot.free or not self.queue:
                 continue
+            if not self._admit_ok(self.queue[0]):
+                break  # FIFO: a deferred head is retried next tick
             req = self.queue.pop(0)
             L = len(req.prompt)
             if self.recorder is not None:
                 # per-slot admission prefills recompute the prompt alone
-                self.recorder.record_step(f"admit#{req.rid}[L{L}]", self.cfg, 1, L, L)
+                self.recorder.record_step(
+                    f"admit#{req.rid}[L{L}]", self.cfg, 1, L, L, phase="prefill"
+                )
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
             logits, cache1 = self._prefill(self.params, batch)
             cache1 = T.pad_cache(cache1, self.cfg, self.max_len)
@@ -225,6 +365,7 @@ class ContinuousBatchingEngine:
             self.recorder.record_step(
                 f"tick[{len(active)}/{len(self.slots)}]",
                 self.cfg, len(self.slots), 1, kv,
+                phase="decode", active=len(active),
             )
         logits, self.caches = self._decode(self.params, self.caches, toks, pos)
         for i in active:

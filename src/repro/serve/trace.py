@@ -17,7 +17,7 @@ prices the real workload on every hardware — the measured-vs-predicted
 protocol of the paper, driven by a live serving trace instead of a
 synthetic request shape.
 
-Recording contract (see docs/predict.md):
+Recording contract (see docs/serving.md):
 
   * one group per executed engine step, in execution order;
   * ``B`` is the *launched* batch (the full lock-step slot pool for the
@@ -33,7 +33,11 @@ Recording contract (see docs/predict.md):
     wall-clock (rather than the oracle) would need padded-cache pricing;
   * labels are informational only (``prefill[...]``, ``decode@pos``,
     ``admit#rid``, ``tick[...]``); group weights are always 1.0 — a
-    recorded step happened exactly once.
+    recorded step happened exactly once;
+  * every step additionally carries a :class:`StepMeta` (shape + phase +
+    active-sequence count) so downstream consumers — the placement
+    layer's split-fleet routing, per-token cost objectives — can classify
+    steps without parsing labels.
 
 The recorder is deliberately cheap: it builds the nested call groups
 (plain dataclasses) and never touches device memory.
@@ -41,16 +45,42 @@ The recorder is deliberately cheap: it builds the nested call groups
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.configs.base import ArchConfig
 from repro.core.e2e import model_calls
 
+#: step phases the placement layer understands; ``"other"`` is the
+#: catch-all for pre-lowered escape-hatch steps with no declared phase
+PHASES = ("prefill", "decode", "other")
+
+
+@dataclasses.dataclass(frozen=True)
+class StepMeta:
+    """Shape + scheduling metadata of one recorded engine step.
+
+    ``B``/``qlen``/``kvlen`` are the *launched* shapes (padded batch,
+    attended KV span — the recording contract above); ``active`` is how
+    many of the ``B`` rows belong to live requests (== ``B`` for the
+    simple batch engine, the in-flight count for the continuous engine's
+    lock-step ticks). A decode step therefore generated ``active`` tokens.
+    """
+
+    label: str
+    phase: str  # one of PHASES
+    B: int
+    qlen: int
+    kvlen: int
+    active: int
+
 
 @dataclasses.dataclass
 class TraceRecorder:
-    """Accumulates one nested call group per executed engine step."""
+    """Accumulates one nested call group per executed engine step, plus a
+    parallel :class:`StepMeta` per step (``meta``)."""
 
     steps: list = dataclasses.field(default_factory=list)
+    meta: list = dataclasses.field(default_factory=list)
 
     def record_step(
         self,
@@ -60,15 +90,34 @@ class TraceRecorder:
         qlen: int,
         kvlen: int,
         tp: int = 1,
+        *,
+        phase: Optional[str] = None,
+        active: Optional[int] = None,
     ) -> None:
         """Record one executed step as the decomposer's call sequence for
-        its shapes (all layers + LM head, the ``model_calls`` lowering)."""
-        self.steps.append((label, 1.0, model_calls(cfg, B, qlen, kvlen, tp)))
+        its shapes (all layers + LM head, the ``model_calls`` lowering).
 
-    def record(self, label: str, calls: list) -> None:
+        ``phase`` defaults to the shape heuristic ``qlen > 1 -> prefill``;
+        engines should pass it explicitly (a 1-token-prompt admission is
+        still a prefill). ``active`` defaults to ``B``."""
+        if phase is None:
+            phase = "prefill" if qlen > 1 else "decode"
+        if phase not in PHASES:
+            raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
+        self.steps.append((label, 1.0, model_calls(cfg, B, qlen, kvlen, tp)))
+        self.meta.append(
+            StepMeta(label, phase, B, qlen, kvlen, B if active is None else active)
+        )
+
+    def record(self, label: str, calls: list, *, phase: str = "other") -> None:
         """Record a pre-lowered call group (escape hatch for custom steps,
-        e.g. PP boundary traffic an engine adds itself)."""
+        e.g. PP boundary traffic an engine adds itself). Shapes are
+        unknown, so the meta row carries zeros and phase ``"other"``
+        unless declared."""
+        if phase not in PHASES:
+            raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
         self.steps.append((label, 1.0, calls))
+        self.meta.append(StepMeta(label, phase, 0, 0, 0, 0))
 
     def calls(self) -> list:
         """The recorded trace as one nested call sequence — feed directly
@@ -78,9 +127,47 @@ class TraceRecorder:
     def labels(self) -> list:
         return [label for label, _, _ in self.steps]
 
+    def phases(self) -> list:
+        """Per-step phase tags, parallel to ``labels()``."""
+        return [m.phase for m in self.meta]
+
+    def split_calls(self) -> dict:
+        """The trace partitioned by phase: ``{"prefill": [...steps...],
+        "decode": [...]}`` (phases with no steps are omitted). Each value
+        is a valid call sequence — this is the input shape
+        ``FleetRouter.route_split`` consumes to place workload classes on
+        different hardware."""
+        out: dict = {}
+        for step, m in zip(self.steps, self.meta):
+            out.setdefault(m.phase, []).append(step)
+        return out
+
+    @property
+    def decode_tokens(self) -> int:
+        """Tokens generated by the recorded *decode* steps only (sum of
+        active rows per decode tick). Each prefill also samples one token
+        per active row, so the total output is :attr:`generated_tokens`."""
+        return sum(m.active for m in self.meta if m.phase == "decode")
+
+    @property
+    def prefill_tokens(self) -> int:
+        """First tokens sampled from recorded prefill steps (one per
+        active row of each prefill/admission)."""
+        return sum(m.active for m in self.meta if m.phase == "prefill")
+
+    @property
+    def generated_tokens(self) -> int:
+        """Every token the recorded run produced: prefill-sampled first
+        tokens plus decode-tick tokens. For a full request of ``lout``
+        output tokens this matches the synthetic ``B * lout`` convention
+        of ``place_request`` — the ``n_tokens`` per-token cost objectives
+        should use."""
+        return self.prefill_tokens + self.decode_tokens
+
     @property
     def n_steps(self) -> int:
         return len(self.steps)
 
     def clear(self) -> None:
         self.steps.clear()
+        self.meta.clear()

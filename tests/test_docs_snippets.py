@@ -1,0 +1,84 @@
+"""Docs CI: every fenced ``python`` block in ``docs/*.md`` must run.
+
+Each guide's blocks execute top-to-bottom in one shared namespace (a
+guide is a script told in prose), on CPU, against the seed registry —
+snippets carry their own smoke-mode sizes. A block can opt out with an
+HTML comment on the line directly above its fence::
+
+    <!-- docs-ci: skip -->
+    ```python
+    cluster.deploy()   # illustrative only
+    ```
+
+Non-``python`` fences (``text``, ``pycon``, shell) are never executed.
+This is the tier-1 step that keeps the guides from rotting against the
+API they describe; CI runs it as its own named step (see ci.yml).
+"""
+import glob
+import os
+import re
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+
+SKIP_MARK = "<!-- docs-ci: skip -->"
+
+
+def extract_blocks(path):
+    """[(first_code_lineno, source)] for every runnable ```python fence."""
+    lines = open(path, encoding="utf-8").read().splitlines()
+    blocks = []
+    i = 0
+    while i < len(lines):
+        m = re.match(r"^\s*```(\w*)\s*$", lines[i])
+        if m and m.group(1) == "python":
+            skip = any(
+                SKIP_MARK in prev
+                for prev in lines[max(i - 2, 0):i]
+                if prev.strip()
+            )
+            start = i + 1
+            j = start
+            while j < len(lines) and not re.match(r"^\s*```\s*$", lines[j]):
+                j += 1
+            if j >= len(lines):
+                raise AssertionError(f"{path}:{i + 1}: unterminated ```python fence")
+            if not skip:
+                blocks.append((start + 1, "\n".join(lines[start:j])))
+            i = j
+        elif m:
+            # skip over a non-python fence so its body can't open a fence
+            j = i + 1
+            while j < len(lines) and not re.match(r"^\s*```\s*$", lines[j]):
+                j += 1
+            i = j
+        i += 1
+    return blocks
+
+
+def test_docs_exist_and_have_snippets():
+    names = {os.path.basename(p) for p in DOCS}
+    assert {"predict.md", "serving.md", "architecture.md"} <= names
+    for required in ("serving.md", "architecture.md", "predict.md"):
+        assert extract_blocks(os.path.join(ROOT, "docs", required)), (
+            f"docs/{required} has no runnable python blocks"
+        )
+
+
+@pytest.mark.parametrize("path", DOCS, ids=[os.path.basename(p) for p in DOCS])
+def test_docs_snippets_run(path):
+    blocks = extract_blocks(path)
+    if not blocks:
+        pytest.skip(f"{os.path.basename(path)} has no runnable python blocks")
+    ns = {"__name__": f"docs_{os.path.basename(path).replace('.', '_')}"}
+    for lineno, src in blocks:
+        code = compile(src, f"{path}:{lineno}", "exec")
+        try:
+            exec(code, ns)  # noqa: S102 — executing our own documentation
+        except Exception as e:
+            raise AssertionError(
+                f"{os.path.basename(path)} block at line {lineno} failed: "
+                f"{type(e).__name__}: {e}"
+            ) from e

@@ -1,0 +1,364 @@
+"""Prediction-guided fleet placement (ISSUE 4): FleetRouter picks the
+analytically-optimal hardware on synthetic registries, skips unpriceable
+entries with a warning, predicted admission honors its decode SLO on a
+recorded trace, and falls back cleanly when the predictor is unfitted."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.dataset import build_dataset
+from repro.core.e2e import model_calls, place_request
+from repro.core.estimator import train_pipeweave
+from repro.core.hardware import REGISTRY, _mk, get_hw
+from repro.predict import (
+    CommRegressor,
+    FeatureCache,
+    KernelCall,
+    SweepPredictor,
+    UnpricedHardwareError,
+    get_objective,
+    get_predictor,
+    trace_cost_usd,
+)
+from repro.serve.placement import FleetRouter
+
+
+# synthetic two-device registry with an analytically-known ranking: the
+# workload below is HBM-bound under the roofline and launch overhead is
+# zeroed, so latency scales as 1/hbm_gbps exactly — "fast" halves the
+# latency but costs 4x per chip-hour, so "slow" wins on cost while
+# "fast" wins on latency.
+FAST = _mk("syn-fast", "syn", 8, 1.0, 200, 1600, 128, True, usd=4.0, launch=0.0)
+SLOW = _mk("syn-slow", "syn", 8, 1.0, 200, 800, 128, True, usd=1.0, launch=0.0)
+
+# rmsnorm streams bytes: hbm-dominant on every spec above
+HBM_TRACE = [KernelCall("rmsnorm", {"seq": 4096, "dim": 4096}, count=8)]
+
+
+@pytest.fixture(scope="module")
+def pw_gemm_only():
+    """A PipeWeave trained on gemm only — triggers UntrainedFamilyError
+    under the default fallback="error" for any other family."""
+    return train_pipeweave(
+        {"gemm": build_dataset("gemm", n_workloads=8, seed=0)}, max_epochs=2
+    )
+
+
+# ----------------------------------------------------------------------
+# routing: objectives + analytically-known rankings
+# ----------------------------------------------------------------------
+
+
+def test_router_picks_analytically_optimal_hw():
+    router = FleetRouter([FAST, SLOW], backend="roofline")
+    by_lat = router.route(HBM_TRACE, objective="latency")
+    assert by_lat.best == "syn-fast"
+    # bandwidth halves the roofline latency exactly
+    assert np.isclose(
+        by_lat["syn-slow"].total_s, 2 * by_lat["syn-fast"].total_s, rtol=1e-9
+    )
+    by_cost = router.route(HBM_TRACE, objective="cost")
+    assert by_cost.best == "syn-slow"
+    # fast: half the time at 4x the rate -> exactly 2x the cost
+    assert np.isclose(
+        by_cost["syn-fast"].score, 2 * by_cost["syn-slow"].score, rtol=1e-9
+    )
+    # ranking + table surface both entries
+    assert by_cost.ranking() == ["syn-slow", "syn-fast"]
+    assert "syn-fast" in by_cost and "nope" not in by_cost
+    assert len(by_cost.table().splitlines()) == 3
+
+
+def test_slo_cheapest_objective():
+    router = FleetRouter([FAST, SLOW], backend="roofline")
+    lat = {r.hw: r.total_s for r in router.route(HBM_TRACE).rows}
+    # SLO between the two latencies: only the fast device is feasible, so
+    # it wins despite being the pricier one
+    slo = (lat["syn-fast"] + lat["syn-slow"]) / 2
+    tight = router.route(HBM_TRACE, objective=get_objective("slo_cheapest", slo_s=slo))
+    assert tight.best == "syn-fast"
+    assert tight["syn-fast"].feasible and not tight["syn-slow"].feasible
+    assert "NO" in tight.table()
+    # loose SLO: both feasible -> cheapest wins
+    loose = router.route(
+        HBM_TRACE, objective=get_objective("slo_cheapest", slo_s=10 * lat["syn-slow"])
+    )
+    assert loose.best == "syn-slow"
+    assert all(r.feasible for r in loose.rows)
+
+
+def test_cost_per_token_needs_n_tokens():
+    router = FleetRouter([FAST, SLOW], backend="roofline", objective="cost_per_token")
+    # a missing n_tokens is a workload-metadata error, not a per-hardware
+    # gap: it must propagate with its actionable message, not be laundered
+    # into one skip warning per fleet entry
+    with pytest.raises(ValueError, match="needs n_tokens"):
+        router.route(HBM_TRACE)  # no n_tokens
+    pl = router.route(HBM_TRACE, n_tokens=64)
+    assert pl.best == "syn-slow"
+    assert np.isclose(
+        pl.rows[0].score, trace_cost_usd(SLOW, pl["syn-slow"].estimate) / 64
+    )
+
+
+def test_unpriced_hw_is_skipped_under_cost_with_warning():
+    unpriced = dataclasses.replace(FAST, name="syn-unpriced", usd_per_chip_hour=None)
+    router = FleetRouter([SLOW, unpriced], backend="roofline")
+    with pytest.warns(UserWarning, match="skipping syn-unpriced"):
+        pl = router.route(HBM_TRACE, objective="cost")
+    assert pl.best == "syn-slow"
+    assert "syn-unpriced" in pl.skipped
+    assert "skipped" in pl.table() and "syn-unpriced" in pl.table()
+    # latency objective doesn't need the price: nothing skipped
+    assert router.route(HBM_TRACE, objective="latency").skipped == {}
+    with pytest.raises(UnpricedHardwareError):
+        trace_cost_usd(unpriced, pl["syn-slow"].estimate)
+
+
+def test_commless_registry_entry_skipped_mid_sweep(pw_gemm_only):
+    """The small fix: a backend whose CommRegressor was never fitted must
+    be skipped with a warning — not abort the whole fleet pass — and the
+    skip must be surfaced in the result."""
+    trace = [(f"s", 1.0, [KernelCall("gemm", {"M": 256, "N": 256, "K": 256})]),
+             ("comm", 1.0, model_calls(get_arch("qwen3-0.6b"), 2, 1, 64, tp=2))]
+    predictors = {
+        "tpu-v5e": get_predictor("oracle", get_hw("tpu-v5e")),
+        # unfitted CommRegressor: raises RuntimeError on the first CommCall
+        "tpu-v6e": get_predictor("roofline", get_hw("tpu-v6e"), comm=CommRegressor()),
+    }
+    router = FleetRouter(sweep=SweepPredictor(predictors=predictors))
+    with pytest.warns(UserWarning, match="skipping tpu-v6e"):
+        pl = router.route(trace)
+    assert pl.best == "tpu-v5e"
+    assert list(pl.skipped) == ["tpu-v6e"]
+    assert "no fitted coefficients" in pl.skipped["tpu-v6e"]
+    assert "tpu-v6e" in pl.table()
+
+
+def test_router_every_hw_skipped_raises(pw_gemm_only):
+    # gemm-only estimator, fallback="error": attention has no model on
+    # any device -> every entry skipped -> actionable error, not an empty
+    # placement
+    router = FleetRouter(
+        ["tpu-v5e", "tpu-v6e"], estimator=pw_gemm_only, cache=FeatureCache()
+    )
+    trace = [("d", 1.0, model_calls(get_arch("qwen3-0.6b"), 2, 1, 64, tp=1))]
+    with pytest.raises(RuntimeError, match="every hardware was skipped"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            router.route(trace)
+
+
+def test_router_rejects_ambiguous_construction():
+    sp = SweepPredictor(["tpu-v5e"], backend="roofline")
+    with pytest.raises(TypeError, match="not both"):
+        FleetRouter(["tpu-v5e"], sweep=sp)
+    with pytest.raises(KeyError, match="unknown objective"):
+        FleetRouter(["tpu-v5e"], backend="roofline", objective="speed")
+
+
+# ----------------------------------------------------------------------
+# split-fleet assignment
+# ----------------------------------------------------------------------
+
+
+def test_split_fleet_prefers_different_devices():
+    """Prefill-heavy (compute-bound) and decode-heavy (bandwidth-bound)
+    classes must route to different synthetic devices when one has the
+    MXU edge and the other the HBM edge."""
+    mxu_rich = _mk("syn-mxu", "syn", 8, 1.0, 400, 800, 128, True, usd=2.0, launch=0.0)
+    hbm_rich = _mk("syn-hbm", "syn", 8, 1.0, 100, 3200, 128, True, usd=2.0, launch=0.0)
+    router = FleetRouter([mxu_rich, hbm_rich], backend="roofline")
+    split = router.route_split(
+        {
+            # big square gemm: mxu-dominant on both specs
+            "prefill": [KernelCall("gemm", {"M": 4096, "N": 4096, "K": 4096})],
+            # byte-streaming: hbm-dominant on both specs
+            "decode": [KernelCall("rmsnorm", {"seq": 4096, "dim": 4096})],
+        }
+    )
+    assert split.assignment == {"prefill": "syn-mxu", "decode": "syn-hbm"}
+    assert split.is_split
+    assert split["prefill"].best == "syn-mxu"
+    assert "-- prefill" in split.table() and "-- decode" in split.table()
+
+
+def test_route_split_from_recorder_and_route_trace():
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.trace import TraceRecorder
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    rec = TraceRecorder()
+    eng = ServeEngine(cfg, max_batch=2, recorder=rec)
+    eng.submit(Request(rid=0, prompt=np.arange(1, 13, dtype=np.int32), max_new=3))
+    eng.step_batch()
+    assert rec.phases() == ["prefill", "decode", "decode"]
+    assert rec.decode_tokens == 2  # two decode ticks, one active row each
+    assert rec.prefill_tokens == 1  # the prefill-sampled first token
+    assert rec.generated_tokens == 3  # == the request's max_new
+
+    router = FleetRouter(["tpu-v5e", "tpu-v6e"], backend="oracle")
+    split = router.route_split(rec)
+    assert set(split.parts) == {"prefill", "decode"}
+    # per-class token counts: per-token objectives work on either side
+    split_cpt = router.route_split(rec, objective="cost_per_token")
+    assert split_cpt["prefill"].n_tokens == 1
+    assert split_cpt["decode"].n_tokens == 2
+    # route_trace wires the generated-token count through
+    pl = router.route_trace(rec, objective="cost_per_token")
+    assert pl.n_tokens == 3
+    with pytest.raises(TypeError, match="TraceRecorder or a"):
+        router.route_split([("s", 1.0, [])])
+    with pytest.raises(ValueError, match="empty trace"):
+        router.route_split({})
+
+
+def test_decode_tokens_with_heterogeneous_max_new():
+    """A short-max_new request riding in a padded batch must stop counting
+    toward `active` once it stops accepting tokens: generated_tokens ==
+    the true output-token count, not ticks x batch."""
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.trace import TraceRecorder
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    rec = TraceRecorder()
+    eng = ServeEngine(cfg, max_batch=2, recorder=rec)
+    eng.submit(Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32), max_new=2))
+    eng.submit(Request(rid=1, prompt=np.arange(1, 9, dtype=np.int32), max_new=6))
+    results = eng.step_batch()
+    true_tokens = sum(len(r.tokens) for r in results)  # 2 + 6 = 8
+    assert true_tokens == 8
+    assert rec.generated_tokens == true_tokens
+    # the launched batch stays padded at B=2 even after rid=0 finishes
+    decode_meta = [m for m in rec.meta if m.phase == "decode"]
+    assert all(m.B == 2 for m in decode_meta)
+    assert [m.active for m in decode_meta] == [2, 1, 1, 1, 1]
+
+
+# ----------------------------------------------------------------------
+# place_request
+# ----------------------------------------------------------------------
+
+
+def test_place_request_over_registry():
+    pl = place_request(get_arch("qwen3-0.6b"), 4, 64, 8, backend="roofline",
+                       objective="cost")
+    assert set(pl.ranking()) == set(REGISTRY)
+    assert pl.n_tokens == 4 * 8
+    # scores are genuine costs and the ranking is sorted
+    scores = [r.score for r in pl.rows]
+    assert scores == sorted(scores) and scores[0] > 0
+    with pytest.raises(TypeError, match="not both"):
+        place_request(get_arch("qwen3-0.6b"), 4, 64, 8, backend="roofline",
+                      router=FleetRouter(backend="roofline"))
+
+
+def test_place_request_pp_applies_bubble():
+    cfg = get_arch("qwen3-0.6b")
+    router = FleetRouter(["tpu-v5e"], backend="oracle")
+    flat = place_request(cfg, 2, 64, 8, router=router)
+    pp = place_request(cfg, 2, 64, 8, pp=2, router=router)
+    # pp=2 adds boundary comms and the (1 + 0.5*(pp-1)/pp) bubble scale
+    assert pp["tpu-v5e"].total_s > flat["tpu-v5e"].total_s * 1.25
+
+
+# ----------------------------------------------------------------------
+# predicted admission
+# ----------------------------------------------------------------------
+
+
+def _reqs(cfg, n, max_new=3, L=10):
+    from repro.serve.engine import Request
+
+    return [
+        Request(rid=i, prompt=np.arange(1, L + 1, dtype=np.int32), max_new=max_new)
+        for i in range(n)
+    ]
+
+
+def test_predicted_admission_never_exceeds_slo():
+    """Every admission decision and every *executed* decode tick of the
+    recorded trace prices under the SLO (worst-case full-pool tick plus
+    quantization headroom)."""
+    from repro.serve.engine import ContinuousBatchingEngine
+    from repro.serve.trace import TraceRecorder
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    pred = get_predictor("oracle", get_hw("tpu-v5e"), cache=FeatureCache())
+    slots, max_len = 2, 48
+    slo = pred.predict(model_calls(cfg, slots, 1, max_len, tp=1)).total_s * 1.05
+
+    rec = TraceRecorder()
+    eng = ContinuousBatchingEngine(
+        cfg, slots=slots, max_len=max_len, recorder=rec,
+        admission="predicted", predictor=pred, decode_slo_s=slo,
+    )
+    for r in _reqs(cfg, 4):
+        eng.submit(r)
+    out = eng.run_to_completion()
+    assert sorted(r.rid for r in out) == [0, 1, 2, 3]
+    assert eng.slo_forced_admits == 0
+    assert len(eng.admission_log) >= 4
+    for d in eng.admission_log:
+        assert d["admitted"] and not d["forced"]
+        assert d["predicted_s"] <= slo
+    # the recorded decode ticks — what actually ran — also meet the SLO
+    ticks = [s for s, m in zip(rec.steps, rec.meta) if m.phase == "decode"]
+    assert ticks
+    assert max(pred.predict([t]).total_s for t in ticks) <= slo
+
+
+def test_predicted_admission_defers_but_makes_progress():
+    """An SLO no single request can meet forces progress-guarantee
+    admissions (warned + counted) instead of deadlocking the queue."""
+    from repro.serve.engine import ContinuousBatchingEngine
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    pred = get_predictor("oracle", get_hw("tpu-v5e"), cache=FeatureCache())
+    eng = ContinuousBatchingEngine(
+        cfg, slots=2, max_len=48,
+        admission="predicted", predictor=pred, decode_slo_s=1e-9,
+    )
+    for r in _reqs(cfg, 3):
+        eng.submit(r)
+    with pytest.warns(UserWarning, match="admitting anyway"):
+        out = eng.run_to_completion()
+    assert sorted(r.rid for r in out) == [0, 1, 2]
+    assert eng.slo_forced_admits == 3  # each admitted alone, one at a time
+    deferred = [d for d in eng.admission_log if not d["admitted"]]
+    assert deferred  # companions were actually held back
+
+
+def test_predicted_admission_falls_back_when_unfitted(pw_gemm_only):
+    """An estimator with no model for the step's families (fallback=
+    "error") must demote the engine to fixed admission with a warning —
+    serving continues, nothing raises."""
+    from repro.serve.engine import ContinuousBatchingEngine
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    sp = get_predictor("synperf", get_hw("tpu-v5e"), estimator=pw_gemm_only)
+    eng = ContinuousBatchingEngine(
+        cfg, slots=2, max_len=48,
+        admission="predicted", predictor=sp, decode_slo_s=1.0,
+    )
+    for r in _reqs(cfg, 3):
+        eng.submit(r)
+    with pytest.warns(UserWarning, match="falling back to fixed"):
+        out = eng.run_to_completion()
+    assert sorted(r.rid for r in out) == [0, 1, 2]
+    assert eng.admission == "fixed"
+    assert "UntrainedFamilyError" in eng.admission_fallback_reason
+    assert eng.admission_log == []  # no decision was ever scored
+
+
+def test_predicted_admission_requires_predictor_and_slo():
+    from repro.serve.engine import ContinuousBatchingEngine
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    with pytest.raises(ValueError, match="admission="):
+        ContinuousBatchingEngine(cfg, admission="predicted")
+    with pytest.raises(ValueError, match="'fixed' or 'predicted'"):
+        ContinuousBatchingEngine(cfg, admission="adaptive")
