@@ -1,0 +1,180 @@
+"""Parallelism-aware prediction smoke (ISSUE 5): EP all-to-all byte
+exactness, pipeline bubble-model exactness, and the 1F1B-beats-GPipe
+margin.
+
+Three standing criteria (asserted under ``--smoke``, the CI gate):
+
+1. **EP-bytes exactness** — ``core.decomposer.ep_alltoall_bytes`` (the
+   workload-dict arithmetic the e2e ``CommCall``s carry) equals
+   ``launch.dryrun.count_ep_alltoall_bytes`` (the ledger counted through
+   the executed model layer's ``dispatch_geometry``) *exactly*, on every
+   MoE arch in the registry across prefill/decode/train shapes.
+2. **Bubble-model exactness** — the closed-form ``schedule_ticks`` equals
+   the event-driven ring simulation for GPipe and interleaved 1F1B over
+   the whole (S, M, V) grid (the executed shard_map schedules are pinned
+   to the same counts in tier-1 ``tests/test_dist.py``).
+3. **1F1B margin** — at the production point (S=4, M=2S, V=2) the
+   interleaved bubble fraction must stay <= ``MAX_BUBBLE_RATIO`` x
+   GPipe's (analytically (S-1)/(V*M+S-1) vs (S-1)/(M+S-1) ~ 0.58x).
+
+Standalone: ``python -m benchmarks.bench_parallelism [--smoke] [--json
+PATH]`` (non-zero exit when a smoke criterion fails — the CI gate).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+# init the backend before repro.launch.dryrun pins XLA_FLAGS (the 512
+# virtual dry-run devices are for the real lowering runs, not this smoke)
+jax.devices()
+
+from benchmarks.common import Csv, write_bench_json  # noqa: E402
+from repro.configs import get_arch, list_archs  # noqa: E402
+from repro.core.decomposer import COMPUTE_DTYPE_BYTES, ep_alltoall_bytes  # noqa: E402
+from repro.core.e2e import layer_calls, pp_bubble  # noqa: E402
+from repro.core.hardware import get_hw  # noqa: E402
+from repro.dist.pipeline import bubble_fraction, schedule_ticks, simulate_schedule  # noqa: E402
+from repro.launch.dryrun import count_ep_alltoall_bytes  # noqa: E402
+from repro.predict import CommCall, SweepPredictor  # noqa: E402
+
+#: 1F1B bubble must be at most this fraction of GPipe's at the gate point
+MAX_BUBBLE_RATIO = 0.65
+GATE_S, GATE_V = 4, 2
+
+EP_SHAPES = ((32, 2048, False), (4, 128, False), (128, 1, False), (8, 512, True))
+
+
+def run(csv: Csv, smoke: bool = False) -> dict:
+    # ---- 1. EP byte exactness across the MoE registry -------------------
+    moe_archs = [a for a in list_archs() if get_arch(a).n_experts]
+    n_cells = 0
+    max_rel = 0.0
+    t0 = time.perf_counter()
+    for arch in moe_archs:
+        cfg = get_arch(arch)
+        for B, qlen, train in EP_SHAPES:
+            led = count_ep_alltoall_bytes(cfg, B, qlen, train=train)
+            cf = cfg.capacity_factor if train else max(cfg.capacity_factor, 2.0)
+            mine = ep_alltoall_bytes({
+                "T": B * qlen, "d": cfg.d_model, "E": cfg.n_experts,
+                "topk": cfg.top_k, "capacity_factor": cf,
+                "moe_group": cfg.moe_group,
+                "dtype_bytes": COMPUTE_DTYPE_BYTES[cfg.compute_dtype],
+            })
+            rel = abs(mine - led["dispatch_bytes"]) / max(led["dispatch_bytes"], 1.0)
+            max_rel = max(max_rel, rel)
+            n_cells += 1
+    ep_s = time.perf_counter() - t0
+    csv.add("parallelism/ep_bytes_cells", ep_s * 1e6 / max(n_cells, 1),
+            f"{n_cells} (arch x shape) cells, max rel diff {max_rel:.1e}")
+    ep_exact = max_rel == 0.0
+
+    # the modeled calls carry exactly these bytes (spot check on dbrx)
+    cfg = get_arch("dbrx-132b")
+    a2a = [c for c in layer_calls(cfg, 4, 128, 128, tp=4)
+           if isinstance(c, CommCall) and c.op == "all_to_all"]
+    led = count_ep_alltoall_bytes(cfg, 4, 128)
+    calls_exact = (len(a2a) == 2
+                   and all(c.nbytes == led["dispatch_bytes"] for c in a2a))
+    nbytes_str = f"{a2a[0].nbytes:.3e}B" if a2a else "none emitted"
+    csv.add("parallelism/ep_commcalls", 0.0,
+            f"dbrx layer: {len(a2a)} all_to_all x {nbytes_str} "
+            f"({'exact' if calls_exact else 'MISMATCH'})")
+
+    # ...and a sweep prices them per hardware
+    trace = [("step", 1.0, layer_calls(cfg, 2, 1, 256, tp=4))]
+    res = SweepPredictor(["tpu-v5e", "tpu-v6e"], "roofline").predict(trace)
+    per_hw_a2a = {n: e.by_comm_op.get("all_to_all", 0.0) for n, e in res.items()}
+    swept = all(v > 0 for v in per_hw_a2a.values())
+    csv.add("parallelism/ep_swept", 0.0,
+            " ".join(f"{n}={v*1e6:.1f}us" for n, v in per_hw_a2a.items()))
+
+    # ---- 2. bubble-model exactness over the schedule grid ----------------
+    t0 = time.perf_counter()
+    n_grid = 0
+    mismatches = 0
+    for S in range(1, 9):
+        for M in range(1, 25):
+            if simulate_schedule(S, M, "gpipe") != schedule_ticks(S, M, "gpipe"):
+                mismatches += 1
+            n_grid += 1
+            for V in (1, 2, 3, 4):
+                if simulate_schedule(S, M, "1f1b", V) != schedule_ticks(S, M, "1f1b", V):
+                    mismatches += 1
+                n_grid += 1
+    grid_s = time.perf_counter() - t0
+    csv.add("parallelism/bubble_grid", grid_s * 1e6 / n_grid,
+            f"{n_grid} (S,M,V) schedules, {mismatches} sim-vs-closed-form "
+            "mismatches")
+
+    # ---- 3. 1F1B margin at the production point --------------------------
+    M = 2 * GATE_S
+    b_gp = bubble_fraction(GATE_S, M, "gpipe")
+    b_il = bubble_fraction(GATE_S, M, "1f1b", GATE_V)
+    ratio = b_il / b_gp
+    csv.add("parallelism/bubble_gpipe", 0.0, f"{b_gp:.4f} (S={GATE_S}, M={M})")
+    csv.add("parallelism/bubble_1f1b", 0.0,
+            f"{b_il:.4f} (V={GATE_V}) = {ratio:.2f}x gpipe "
+            f"(target <={MAX_BUBBLE_RATIO}x)")
+    csv.add("parallelism/pp_surcharge", 0.0,
+            f"gpipe {pp_bubble(GATE_S, M):.4f}x vs 1f1b "
+            f"{pp_bubble(GATE_S, M, '1f1b', GATE_V):.4f}x")
+
+    results = {
+        "moe_archs": moe_archs,
+        "ep_cells": n_cells,
+        "ep_max_rel_diff": max_rel,
+        "ep_commcalls_exact": calls_exact,
+        "ep_swept_per_hw": {n: v for n, v in per_hw_a2a.items()},
+        "bubble_grid_points": n_grid,
+        "bubble_grid_mismatches": mismatches,
+        "bubble_gpipe": b_gp,
+        "bubble_1f1b": b_il,
+        "bubble_ratio": ratio,
+        "max_bubble_ratio_target": MAX_BUBBLE_RATIO,
+    }
+    if smoke:
+        assert ep_exact, (
+            f"EP all-to-all bytes diverged from the dry-run ledger "
+            f"(max rel diff {max_rel:.2e} over {n_cells} cells) — "
+            "decomposer.ep_alltoall_bytes vs models.moe.dispatch_geometry drift"
+        )
+        assert calls_exact, "layer_calls EP CommCalls lost byte exactness"
+        assert swept, f"sweep failed to price EP traffic per hw: {per_hw_a2a}"
+        assert mismatches == 0, (
+            f"{mismatches} schedule grid points where the closed-form tick "
+            "count diverged from the ring simulation"
+        )
+        assert ratio <= MAX_BUBBLE_RATIO, (
+            f"1F1B bubble is {ratio:.2f}x GPipe's at S={GATE_S}, M={M} "
+            f"(target <={MAX_BUBBLE_RATIO}x) — interleaving regressed"
+        )
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert the exactness + margin criteria (CI gate)")
+    ap.add_argument("--json", help="write BENCH_parallelism.json-style artifact here")
+    args = ap.parse_args(argv)
+    csv = Csv()
+    print("name,us_per_call,derived")
+    try:
+        results = run(csv, smoke=args.smoke)
+        failed = False
+    except AssertionError as e:
+        print(f"# SMOKE FAILURE: {e}", file=sys.stderr)
+        results = {"error": str(e)}
+        failed = True
+    if args.json:
+        write_bench_json(args.json, csv, **results, passed=not failed)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -255,6 +255,62 @@ def decompose_fused_moe(X: dict, hw: TPUSpec) -> TaskArray:
     )
 
 
+# ----------------------------------------------------------------------
+# Expert-parallel dispatch/combine all-to-all (collective payload model).
+# Not a kernel family: EP traffic is priced by the comm half of every
+# backend (CommRegressor / hwsim.simulate_comm), but the *payload* is a
+# dimension-derived analytical quantity exactly like the task demands
+# above, so it lives with the decomposer.
+# ----------------------------------------------------------------------
+
+
+#: bytes per element of the compute dtypes the model zoo runs in — the
+#: dtype the dispatched activations cross the EP axis as (shared by the
+#: e2e workload generator and the dry-run ledger so the two can't drift)
+COMPUTE_DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4}
+
+
+def moe_dispatch_geometry(
+    T: int, E: int, topk: int, capacity_factor: float, moe_group: int
+) -> tuple:
+    """``(G, Sg, C)`` of the dense GSPMD/GShard MoE dispatch for ``T``
+    tokens: ``G`` dispatch groups of ``Sg`` tokens (the largest divisor of
+    ``T`` that is <= ``moe_group``), each with per-expert capacity
+    ``C = max(ceil(Sg * topk / E * capacity_factor), topk)``.
+
+    This is the decomposer's *independent* statement of the geometry the
+    model layer executes (``repro.models.moe.dispatch_geometry``);
+    ``tests/test_parallelism.py`` and ``benchmarks/bench_parallelism.py``
+    pin the two byte-for-byte against ``launch.dryrun``'s model-derived
+    count on every MoE arch, so drift in either breaks CI.
+    """
+    Sg = next(g for g in range(min(moe_group, T), 0, -1) if T % g == 0)
+    C = max(int(math.ceil(Sg * topk / E * capacity_factor)), topk)
+    return T // Sg, Sg, C
+
+
+def ep_alltoall_bytes(X: dict) -> float:
+    """Payload bytes of ONE expert-parallel all-to-all hop (dispatch and
+    combine are symmetric): the full dispatched-activation tensor
+    ``(G, E, C, d)`` in the compute dtype — the tensor the EP mesh axis
+    actually re-shards, and the quantity ``launch.dryrun
+    .count_ep_alltoall_bytes`` counts from the model implementation.
+
+    ``X`` keys: ``T`` (tokens in the step), ``d`` (model dim), ``E``
+    (experts), ``topk``, ``capacity_factor`` (the *serving* factor — e2e
+    passes ``max(cfg.capacity_factor, 2.0)`` to match the model's
+    inference capacity), ``moe_group``, optional ``dtype_bytes`` (2).
+    The returned bytes are the whole-tensor payload; per-chip traffic is
+    the comm model's concern (``simulate_comm`` applies the ``(n-1)/n``
+    cross-chip fraction for balanced all-to-alls).
+    """
+    G, _, C = moe_dispatch_geometry(
+        int(X["T"]), int(X["E"]), int(X["topk"]),
+        float(X["capacity_factor"]), int(X["moe_group"]),
+    )
+    return float(G * int(X["E"]) * C * int(X["d"]) * X.get("dtype_bytes", 2))
+
+
 DECOMPOSERS = {
     "gemm": decompose_gemm,
     "scaled_mm": decompose_scaled_mm,

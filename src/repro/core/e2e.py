@@ -17,7 +17,13 @@ Modeling conventions (documented deviations):
   * one REGISTRY slice = one accelerator unit (the paper's "GPU"); TP/PP
     span units, the slice's chips are the intra-unit parallelism;
   * MoE EP over TP units: each unit runs ~M*topk/tp token-expert pairs on
-    E/tp local experts with 2 all-to-all hops;
+    E/tp local experts; dispatch and combine are first-class
+    ``CommCall("all_to_all", ...)``s whose payload is the dispatched
+    (G, E, C, d) tensor — byte-exact against the executed model layer
+    (``decomposer.ep_alltoall_bytes`` == ``dryrun.count_ep_alltoall_bytes``);
+  * PP bubbles are the exact tick counts of the executed
+    ``dist.pipeline`` schedules (GPipe or interleaved 1F1B), see
+    ``pp_bubble``;
   * SSM (mamba2/hymba) lowers to the SSD chunked einsum structure expressed
     as gemm + elementwise calls (its MXU/VPU demands), an approximation
     noted in DESIGN.md;
@@ -32,6 +38,7 @@ from typing import Callable, Optional
 
 from repro.configs.base import ArchConfig
 from repro.core import hwsim
+from repro.core.decomposer import COMPUTE_DTYPE_BYTES, ep_alltoall_bytes
 from repro.core.hardware import TPUSpec
 
 # call types + comm regressor live in the predict layer now; re-exported
@@ -132,8 +139,25 @@ def layer_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list
         pairs = T * cfg.top_k
         M_unit = max(int(math.ceil(pairs / tp)), 1)
         calls.append(_gemm(T, cfg.n_experts, d))  # router
+        # EP dispatch/combine: the expert dim shards over the tp units, so
+        # routed tokens cross the mesh twice as all-to-alls. The payload is
+        # the dispatched-activation tensor (G, E, C, d) — the exact bytes
+        # launch.dryrun.count_ep_alltoall_bytes derives from the executed
+        # model layer (serving capacity: max(capacity_factor, 2.0), the
+        # inference branch of models.moe._capacity).
         if tp > 1:
-            calls.append(CommCall("p2p", T * d * 2.0 * cfg.top_k / tp, tp, count=2))
+            a2a = ep_alltoall_bytes(
+                {
+                    "T": T,
+                    "d": d,
+                    "E": cfg.n_experts,
+                    "topk": cfg.top_k,
+                    "capacity_factor": max(cfg.capacity_factor, 2.0),
+                    "moe_group": cfg.moe_group,
+                    "dtype_bytes": COMPUTE_DTYPE_BYTES[cfg.compute_dtype],
+                }
+            )
+            calls.append(CommCall("all_to_all", a2a, tp))  # dispatch
         calls.append(
             KernelCall(
                 "fused_moe",
@@ -148,10 +172,10 @@ def layer_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list
                 },
             )
         )
+        if tp > 1:
+            calls.append(CommCall("all_to_all", a2a, tp))  # combine
         if cfg.dense_residual:
             calls += ffn_block(cfg.d_ff)
-        if tp > 1:
-            calls.append(CommCall("all_reduce", T * d * 2.0, tp))
     elif fam == "ssm":
         calls += ssm_block()
     elif fam == "hybrid":
@@ -184,13 +208,31 @@ def model_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list
     return calls
 
 
+def pp_boundary_hops(pp: int, schedule: str = "gpipe", interleave: int = 2) -> int:
+    """Device hops an activation makes crossing stage boundaries: GPipe's
+    contiguous placement crosses ``pp - 1``; the interleaved 1F1B placement
+    routes every activation through all ``pp * interleave`` chunks, i.e.
+    ``pp * interleave - 1`` ring hops. Single source of truth for
+    ``request_calls`` and ``serve.trace.TraceRecorder``."""
+    if pp <= 1:
+        return 0
+    return pp * interleave - 1 if schedule == "1f1b" else pp - 1
+
+
 def request_calls(
-    cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1
+    cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
+    pp_schedule: str = "gpipe", pp_interleave: int = 2,
 ) -> list:
     """The full request's call sequence: prefill + Simpson-weighted decode
     samples (3 cache lengths integrate the growing KV) + PP stage-boundary
     activations. One batched ``Predictor.predict`` over this sequence
-    replaces 4 ``step_time`` passes."""
+    replaces 4 ``step_time`` passes.
+
+    Stage-boundary traffic follows the schedule: GPipe crosses ``pp - 1``
+    boundaries per token; the interleaved 1F1B placement
+    (``pp_schedule="1f1b"``) routes every activation through
+    ``pp * pp_interleave - 1`` chunk boundaries, all of them device hops
+    on the pipeline ring (``dist.pipeline``)."""
     groups = [("prefill", 1.0, model_calls(cfg, B, lin, lin, tp))]
     for label, w, kvlen in (
         ("decode_start", lout / 6.0, lin),
@@ -200,7 +242,9 @@ def request_calls(
         groups.append((label, w, model_calls(cfg, B, 1, kvlen, tp)))
     if pp > 1:
         # stage boundary activations, per token step and per prefill
-        boundary = (pp - 1) * (B * cfg.d_model * 2.0)
+        boundary = pp_boundary_hops(pp, pp_schedule, pp_interleave) * (
+            B * cfg.d_model * 2.0
+        )
         groups.append(
             ("pp_boundary", 1.0, [
                 CommCall("p2p", boundary * lin, 2),
@@ -215,10 +259,36 @@ def request_calls(
 # ----------------------------------------------------------------------
 
 
-def _pp_bubble(pp: int) -> float:
-    """GPipe fill/drain bubble surcharge factor for a single request
-    spanning ``pp`` stages (1.0 when not pipelined)."""
-    return 1.0 + 0.5 * (pp - 1) / pp if pp > 1 else 1.0
+def pp_bubble(
+    pp: int,
+    n_micro: Optional[int] = None,
+    schedule: str = "gpipe",
+    interleave: int = 2,
+) -> float:
+    """Pipeline bubble surcharge factor: executed schedule length over
+    ideal per-device work, from the exact tick counts of
+    ``dist.pipeline.schedule_ticks`` (validated against the executed
+    ``shard_map`` schedules — see ``tests/test_parallelism.py``).
+
+    ``n_micro`` defaults to ``2 * pp`` microbatches, the production
+    convention this repo schedules requests at. For GPipe that default
+    reduces to ``1 + (pp - 1) / (2 * pp)`` — numerically identical to the
+    pre-ISSUE-5 heuristic surcharge, so existing estimates are unchanged;
+    the interleaved 1F1B schedule (``schedule="1f1b"``) divides the
+    fill/drain cost by ``interleave`` and is strictly cheaper whenever
+    ``pp > 1``. Returns 1.0 when not pipelined."""
+    if pp <= 1:
+        return 1.0
+    from repro.dist.pipeline import schedule_ticks
+
+    M = 2 * pp if n_micro is None else int(n_micro)
+    ticks = schedule_ticks(pp, M, schedule, interleave)
+    work = M * (interleave if schedule == "1f1b" else 1)
+    return ticks / work
+
+
+# pre-ISSUE-5 private name; the GPipe default is numerically identical
+_pp_bubble = pp_bubble
 
 
 def _resolve_predictor(predictor, kernel_time, comm_time):
@@ -257,20 +327,32 @@ def step_time(
 
 def request_estimate(
     cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
+    pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,
+    pp_interleave: int = 2,
     predictor=None, kernel_time: Optional[Callable] = None,
     comm_time: Optional[Callable] = None,
 ) -> Estimate:
     """prefill + Simpson-integrated decode as one batched prediction, with
-    a GPipe-style PP bubble surcharge applied to the whole estimate."""
+    the schedule's analytical PP bubble surcharge (``pp_bubble``) applied
+    to the whole estimate. ``pp_schedule``/``pp_microbatches``/
+    ``pp_interleave`` pick the pipeline schedule (GPipe default; the
+    interleaved 1F1B of ``dist.pipeline`` shrinks the bubble at the same
+    microbatch count)."""
     pred = _resolve_predictor(predictor, kernel_time, comm_time)
-    est = pred.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp))
+    est = pred.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp,
+                                     pp_schedule=pp_schedule,
+                                     pp_interleave=pp_interleave))
     if pp > 1:
-        est = est.scaled(_pp_bubble(pp))  # bubble (single request)
+        est = est.scaled(
+            pp_bubble(pp, pp_microbatches, pp_schedule, pp_interleave)
+        )
     return est
 
 
 def request_sweep(
     cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
+    pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,
+    pp_interleave: int = 2,
     hws=None, sweep: Optional[SweepPredictor] = None, backend: str = "synperf",
     **backend_kw,
 ) -> SweepResult:
@@ -283,14 +365,20 @@ def request_sweep(
     ``**backend_kw`` construct one per call (e.g. ``estimator=pw``)."""
     check_prebuilt_exclusive("sweep", sweep, hws, backend, backend_kw)
     sp = sweep if sweep is not None else SweepPredictor(hws, backend, **backend_kw)
-    res = sp.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp))
+    res = sp.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp,
+                                   pp_schedule=pp_schedule,
+                                   pp_interleave=pp_interleave))
     if pp > 1:
-        res = res.scaled(_pp_bubble(pp))  # same bubble surcharge
+        res = res.scaled(
+            pp_bubble(pp, pp_microbatches, pp_schedule, pp_interleave)
+        )
     return res
 
 
 def place_request(
     cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
+    pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,
+    pp_interleave: int = 2,
     objective="latency", hws=None, backend: str = "synperf", router=None,
     **backend_kw,
 ):
@@ -308,19 +396,24 @@ def place_request(
 
     check_prebuilt_exclusive("router", router, hws, backend, backend_kw)
     rt = router if router is not None else FleetRouter(hws, backend, **backend_kw)
-    calls = request_calls(cfg, B, lin, lout, tp=tp, pp=pp)
+    calls = request_calls(cfg, B, lin, lout, tp=tp, pp=pp,
+                          pp_schedule=pp_schedule, pp_interleave=pp_interleave)
     return rt.route(calls, objective=objective, n_tokens=B * lout,
-                    scale=_pp_bubble(pp))
+                    scale=pp_bubble(pp, pp_microbatches, pp_schedule,
+                                    pp_interleave))
 
 
 def request_latency(
     cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
+    pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,
+    pp_interleave: int = 2,
     predictor=None, kernel_time: Optional[Callable] = None,
     comm_time: Optional[Callable] = None,
 ) -> float:
     return request_estimate(
-        cfg, B, lin, lout, tp=tp, pp=pp, predictor=predictor,
-        kernel_time=kernel_time, comm_time=comm_time,
+        cfg, B, lin, lout, tp=tp, pp=pp, pp_schedule=pp_schedule,
+        pp_microbatches=pp_microbatches, pp_interleave=pp_interleave,
+        predictor=predictor, kernel_time=kernel_time, comm_time=comm_time,
     ).total_s
 
 

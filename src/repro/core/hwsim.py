@@ -103,12 +103,16 @@ def simulate_comm(op: str, nbytes: float, n_chips: int, hw: TPUSpec) -> float:
     if n_chips <= 1 or nbytes <= 0:
         return 0.0
     bw = hw.ici_gbps * 1e9 * hw.ici_links
+    # all_to_all: every chip keeps 1/n of the payload and ships the rest —
+    # the balanced EP dispatch/combine pattern (nbytes is the whole tensor)
     steps = {"all_reduce": 2.0 * (n_chips - 1) / n_chips,
              "all_gather": (n_chips - 1) / n_chips,
              "reduce_scatter": (n_chips - 1) / n_chips,
+             "all_to_all": (n_chips - 1) / n_chips,
              "p2p": 1.0}[op]
     alpha = 4e-6 + 0.5e-6 * np.log2(max(n_chips, 2))
     beta = nbytes * steps / bw
-    contention = 1.0 + 0.12 * (n_chips > 8) + 0.05 * (op == "all_reduce")
+    contention = (1.0 + 0.12 * (n_chips > 8) + 0.05 * (op == "all_reduce")
+                  + 0.08 * (op == "all_to_all"))
     t = alpha + beta * contention
     return float(t * _noise(op, {"b": int(nbytes), "n": n_chips}, hw, amp=0.05))

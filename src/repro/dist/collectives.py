@@ -43,6 +43,25 @@ def ef_compress_grads(grads: Any, err: Optional[Any]) -> Tuple[Any, Any]:
     as zeros here, which is why the train state stores ``err: None`` until
     compression actually runs). Returns ``(dequantized_grads, new_err)``
     with both trees matching the structure of ``grads``.
+
+    Error-feedback invariants (what makes the scheme sound, and what the
+    unit tests pin):
+
+    * **per-leaf conservation** — for every leaf, exactly
+      ``dequantized + new_err == grads + err`` in float32: quantization
+      error is never dropped, only deferred to the next step's input;
+    * **telescoping** — summed over steps the carried residuals cancel,
+      so the accumulated compressed updates equal the true gradient sum
+      up to the single final residual (bounded by one quantization step:
+      ``absmax / 127``). This is the EF-SGD/1-bit-Adam argument that
+      licenses shipping 4x fewer bytes through the all-reduce;
+    * **residual boundedness** — ``|new_err| <= scale/2`` elementwise for
+      a non-degenerate scale, so the carried state cannot grow without
+      bound while gradients stay bounded;
+    * **structure stability** — ``new_err`` always has the structure and
+      dtypes of ``grads`` (float32 leaves), regardless of whether ``err``
+      was None, so donated-buffer aliasing under ``jit`` sees a fixed
+      state layout after the first step.
     """
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     if err is None:

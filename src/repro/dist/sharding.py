@@ -63,8 +63,29 @@ def resolve_pspec(shape: Sequence[int], axis_roles: Sequence[Optional[str]], mes
     """Resolve one tensor's axis roles into a PartitionSpec on ``mesh``.
 
     ``axis_roles`` has one entry per dim: a role name or None (replicate).
-    Always returns a spec that is valid to shard ``shape`` with — anything
-    that doesn't divide falls back to replication for that dim.
+    Role semantics (the ``_ROLE_AXES`` table):
+
+    * ``"batch"`` — data-parallel dim; may span several mesh axes jointly,
+      greedily taking the longest prefix of ``("pod", "data")`` whose
+      product divides the dim (pods are the outermost data dimension);
+    * ``"fsdp"`` — parameter-shard dim of fully-sharded data parallelism;
+      maps to ``"data"`` only (never pods: FSDP gathers stay intra-pod);
+    * ``"tp"`` — tensor-parallel (Megatron row/column) dim on ``"model"``;
+    * ``"experts"`` — expert-parallel dim, also on ``"model"``: EP and TP
+      share the axis, and the at-most-once consumption rule below is what
+      forces an expert-sharded weight's hidden dims to replicate. The
+      dispatch/combine all-to-alls this sharding implies are modeled
+      byte-exactly by ``core.decomposer.ep_alltoall_bytes``;
+    * ``"pipe"`` — pipeline-stage dim on the ``"pipe"`` axis (present on
+      the pipeline production mesh, ``launch.mesh``); the stacked layer
+      dim ``dist.pipeline.pipeline_forward`` shards its chunks over.
+
+    Guarantees: the returned spec is always valid to shard ``shape`` with —
+    a role whose axes are absent replicates, a dim a candidate axis does
+    not divide evenly replicates (greedy prefix: the first non-dividing
+    axis stops a multi-axis role), and a mesh axis is consumed at most
+    once per spec (first dim wins; later dims claiming the same axis
+    replicate).
     """
     if len(shape) != len(axis_roles):
         raise ValueError(f"shape {tuple(shape)} vs roles {tuple(axis_roles)}")

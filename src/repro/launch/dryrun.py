@@ -36,7 +36,7 @@ from repro.dist.sharding import (
     to_named,
     use_mesh,
 )
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_tag
 from repro.models.registry import build_model, input_specs
 from repro.train.step import (
     TrainConfig,
@@ -109,6 +109,49 @@ def collective_bytes(hlo_text: str) -> dict:
 
 
 # ----------------------------------------------------------------------
+# expert-parallel all-to-all ledger (counted from the model itself)
+# ----------------------------------------------------------------------
+
+def count_ep_alltoall_bytes(cfg, B: int, qlen: int, *, train: bool = False) -> dict:
+    """Count the EP dispatch/combine all-to-all payload of one MoE layer
+    straight from the executed model implementation.
+
+    ``repro.models.moe.dispatch_geometry`` is the same code path
+    ``moe_layer`` uses to build the dispatched-activation tensor
+    ``(G, E, C, d)`` — the tensor the expert mesh axis re-shards — so this
+    is the dry-run's ground-truth byte ledger for EP traffic, in the
+    layer's compute dtype. ``core.decomposer.ep_alltoall_bytes`` must
+    reproduce ``dispatch_bytes``/``combine_bytes`` *exactly* from its
+    workload dict (pinned per MoE arch by ``tests/test_parallelism.py``
+    and gated in ``benchmarks/bench_parallelism.py``); the decomposer's
+    ``CommCall``s and this ledger therefore price the same tensor the
+    optimized-HLO collective pass above streams.
+
+    Returns per-hop and per-layer byte counts plus the geometry:
+    ``{"dispatch_bytes", "combine_bytes", "layer_bytes", "model_bytes",
+    "G", "group", "capacity"}`` (``model_bytes`` = per-layer x n_layers —
+    the whole step's EP traffic)."""
+    from repro.core.decomposer import COMPUTE_DTYPE_BYTES
+    from repro.models.moe import dispatch_geometry
+
+    if not cfg.n_experts:
+        raise ValueError(f"{cfg.name} is not an MoE architecture")
+    T = B * qlen
+    G, Sg, C = dispatch_geometry(cfg, T, train=train)
+    b = COMPUTE_DTYPE_BYTES[cfg.compute_dtype]
+    hop = float(G * cfg.n_experts * C * cfg.d_model * b)
+    return {
+        "dispatch_bytes": hop,
+        "combine_bytes": hop,
+        "layer_bytes": 2.0 * hop,
+        "model_bytes": 2.0 * hop * cfg.n_layers,
+        "G": G,
+        "group": Sg,
+        "capacity": C,
+    }
+
+
+# ----------------------------------------------------------------------
 # per-cell lowering
 # ----------------------------------------------------------------------
 
@@ -117,13 +160,19 @@ def state_pspecs(state_shapes, mesh):
     return train_state_pspecs(state_shapes, mesh)
 
 
-def lower_cell(arch: str, shape_name: str, multi_pod: bool):
-    """Lower + compile one cell. Returns (lowered, compiled, meta)."""
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, pipeline: bool = False):
+    """Lower + compile one cell. Returns (lowered, compiled, meta).
+
+    ``pipeline=True`` lowers against the pipeline-parallel production
+    mesh (4-way ``pipe`` axis, see ``launch.mesh``); parameter/batch
+    sharding rules replicate over the ``pipe`` axis (only the ``"pipe"``
+    role claims it), so the lowering stays coherent while the mesh leaves
+    room for ``dist.pipeline.pipeline_forward`` stage placement."""
     cfg = get_arch(arch)
     shape = SHAPES[shape_name]
     if not cfg.supports_shape(shape):
         raise ValueError(f"{arch} x {shape_name}: documented skip (DESIGN.md)")
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod, pipeline=pipeline)
     api = build_model(cfg)
     specs = input_specs(cfg, shape)
 
@@ -189,7 +238,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
     meta = {
         "arch": arch,
         "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": mesh_tag(multi_pod=multi_pod, pipeline=pipeline),
         "n_devices": mesh.devices.size,
         "compile_s": round(compile_s, 1),
     }
@@ -231,13 +280,24 @@ def analyze(lowered, compiled, meta) -> dict:
     }
     out["unknown_ops"] = walk.unknown_ops
     out["hlo_lines"] = len(text.splitlines())
+    cfg = get_arch(meta["arch"])
+    if cfg.n_experts:
+        # the analytical EP all-to-all ledger next to the HLO-counted
+        # collectives: per-layer dispatch/combine bytes of the dispatched
+        # (G, E, C, d) tensor, from the model's own grouping/capacity code
+        shape = SHAPES[meta["shape"]]
+        qlen = 1 if shape.kind == "decode" else shape.seq_len
+        out["ep_alltoall"] = count_ep_alltoall_bytes(
+            cfg, shape.global_batch, qlen, train=shape.kind == "train"
+        )
     return out
 
 
 def run_cell(
-    arch: str, shape_name: str, multi_pod: bool, print_analysis=True, hlo_path=None
+    arch: str, shape_name: str, multi_pod: bool, print_analysis=True, hlo_path=None,
+    pipeline: bool = False,
 ) -> dict:
-    lowered, compiled, meta = lower_cell(arch, shape_name, multi_pod)
+    lowered, compiled, meta = lower_cell(arch, shape_name, multi_pod, pipeline)
     result = analyze(lowered, compiled, meta)
     if hlo_path:
         import zstandard
@@ -255,6 +315,9 @@ def main():
     ap.add_argument("--shape")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="lower against the pipeline-parallel production "
+                         "mesh (4-way pipe axis; see launch.mesh)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
@@ -266,7 +329,7 @@ def main():
     n_fail = 0
     for arch, shape_name in cells:
         for mp in meshes:
-            tag = f"{arch}__{shape_name}__{'2x16x16' if mp else '16x16'}"
+            tag = f"{arch}__{shape_name}__{mesh_tag(multi_pod=mp, pipeline=args.pipeline)}"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path):
                 print(f"[skip cached] {tag}")
@@ -278,6 +341,7 @@ def main():
                 result = run_cell(
                     arch, shape_name, mp, print_analysis=False,
                     hlo_path=os.path.join(hlo_dir, tag + ".hlo.zst"),
+                    pipeline=args.pipeline,
                 )
                 with open(path, "w") as f:
                     json.dump(result, f, indent=2, default=str)

@@ -41,14 +41,25 @@ def _capacity(group: int, cfg: ArchConfig, train: bool) -> int:
     return max(c, cfg.top_k)
 
 
+def dispatch_geometry(cfg: ArchConfig, T: int, *, train: bool) -> tuple:
+    """``(G, Sg, C)`` the executed layer uses for ``T`` tokens: group
+    count, group size (largest divisor of ``T`` <= ``cfg.moe_group``) and
+    per-expert capacity. This is the single source of truth for the shape
+    of the dispatched-activation tensor ``(G, E, C, d)`` — ``moe_layer``
+    builds exactly this tensor, and ``launch.dryrun`` counts EP all-to-all
+    bytes from it, so the dry-run ledger can never drift from what the
+    model actually ships across the expert axis."""
+    Sg = next(g for g in range(min(cfg.moe_group, T), 0, -1) if T % g == 0)
+    return T // Sg, Sg, _capacity(Sg, cfg, train)
+
+
 def moe_layer(p, x, cfg: ArchConfig, *, train: bool):
     """x: (B, S, d) -> (out, aux_loss)."""
     B, S, d = x.shape
     E, K = cfg.n_experts, cfg.top_k
     T = B * S
     xt = x.reshape(T, d)
-    Sg = next(g for g in range(min(cfg.moe_group, T), 0, -1) if T % g == 0)
-    G = T // Sg
+    G, Sg, _C = dispatch_geometry(cfg, T, train=train)
     xg = xt.reshape(G, Sg, d)
 
     # ---- routing --------------------------------------------------------
@@ -58,7 +69,7 @@ def moe_layer(p, x, cfg: ArchConfig, *, train: bool):
     top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
 
     # ---- capacity assignment (priority: slot k, then token order) --------
-    C = _capacity(Sg, cfg, train)
+    C = _C
     onehot = jax.nn.one_hot(top_ids, E, dtype=jnp.float32)  # (G, Sg, K, E)
     # rank within expert, counting slot-major: (k, s) flattened with k outer
     flat = jnp.moveaxis(onehot, 2, 1).reshape(G, K * Sg, E)

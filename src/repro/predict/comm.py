@@ -19,16 +19,30 @@ from repro.core.hardware import TPUSpec
 
 class CommRegressor:
     """Per (op, participant-count) bucket, fit latency = alpha + beta*bytes
-    on profiled samples — the standard alpha-beta structure."""
+    on profiled samples — the standard alpha-beta structure.
+
+    ``OPS`` is the fitted collective vocabulary; it includes the
+    expert-parallel ``all_to_all`` (MoE dispatch/combine, ISSUE 5).
+    Regressors fitted before that op existed raise an actionable
+    RuntimeError naming their fitted ops when asked for it — the error
+    ``FleetRouter`` surfaces as a per-hardware skip warning."""
+
+    #: collectives ``fit`` profiles (must cover every op the workload
+    #: generator emits — see ``core.e2e.layer_calls``/``request_calls``)
+    OPS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all", "p2p")
 
     def __init__(self):
         self.theta: dict = {}
 
     _NS = (2, 4, 8, 16)
 
+    def fitted_ops(self) -> list:
+        """Sorted op names this regressor has coefficients for."""
+        return sorted({op for op, _ in self.theta})
+
     def fit(self, hw: TPUSpec, seed: int = 0) -> "CommRegressor":
         rng = np.random.default_rng(seed)
-        for op in ("all_reduce", "all_gather", "reduce_scatter", "p2p"):
+        for op in self.OPS:
             for n in self._NS:
                 rows, ys = [], []
                 for _ in range(60):
@@ -47,10 +61,19 @@ class CommRegressor:
     def predict(self, op: str, nbytes: float, n: int) -> float:
         if not self.theta:
             raise RuntimeError(
-                "CommRegressor has no fitted coefficients — call fit(hw) first"
+                "CommRegressor has no fitted coefficients (fitted ops: "
+                "none) — call fit(hw) first"
             )
         if n <= 1 or nbytes <= 0:
             return 0.0
         nb = min(self._NS, key=lambda x: abs(math.log(x) - math.log(max(n, 2))))
+        if (op, nb) not in self.theta:
+            raise RuntimeError(
+                f"CommRegressor has no coefficients for comm op {op!r} "
+                f"(fitted ops: {self.fitted_ops()}) — call fit(hw) to "
+                f"refit; regressors fitted before an op joined "
+                f"CommRegressor.OPS (e.g. the EP 'all_to_all') must be "
+                f"refitted to price it"
+            )
         a, b = self.theta[(op, nb)]
         return float(max(a + b * nbytes, 1e-7))

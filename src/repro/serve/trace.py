@@ -64,6 +64,8 @@ class StepMeta:
     many of the ``B`` rows belong to live requests (== ``B`` for the
     simple batch engine, the in-flight count for the continuous engine's
     lock-step ticks). A decode step therefore generated ``active`` tokens.
+    ``tp``/``pp`` are the parallel degrees the step was *recorded at*
+    (the recorder's declared mesh — see :class:`TraceRecorder`).
     """
 
     label: str
@@ -72,15 +74,33 @@ class StepMeta:
     qlen: int
     kvlen: int
     active: int
+    tp: int = 1
+    pp: int = 1
 
 
 @dataclasses.dataclass
 class TraceRecorder:
     """Accumulates one nested call group per executed engine step, plus a
-    parallel :class:`StepMeta` per step (``meta``)."""
+    parallel :class:`StepMeta` per step (``meta``).
+
+    ``tp``/``pp`` declare the mesh the trace should be *priced at*: the
+    reference engines execute single-process (tp=1), but a recorder
+    constructed with ``TraceRecorder(tp=4, pp=2)`` lowers every recorded
+    step at those parallel degrees, so the trace carries the TP
+    all-reduces/all-gathers, the MoE expert-parallel dispatch/combine
+    all-to-alls (byte-exact — ``core.e2e.layer_calls``) and the PP
+    stage-boundary activations. Recorded traces therefore price
+    collective costs through ``SweepPredictor``/``FleetRouter`` exactly
+    like synthetic ``request_calls`` do. A per-step ``tp=`` argument to
+    :meth:`record_step` overrides the declared degree."""
 
     steps: list = dataclasses.field(default_factory=list)
     meta: list = dataclasses.field(default_factory=list)
+    tp: int = 1
+    pp: int = 1
+    #: pipeline schedule the PP boundary traffic is recorded for
+    pp_schedule: str = "gpipe"
+    pp_interleave: int = 2
 
     def record_step(
         self,
@@ -89,24 +109,39 @@ class TraceRecorder:
         B: int,
         qlen: int,
         kvlen: int,
-        tp: int = 1,
+        tp: Optional[int] = None,
         *,
         phase: Optional[str] = None,
         active: Optional[int] = None,
     ) -> None:
         """Record one executed step as the decomposer's call sequence for
-        its shapes (all layers + LM head, the ``model_calls`` lowering).
+        its shapes (all layers + LM head, the ``model_calls`` lowering),
+        at the recorder's declared parallel degrees (``tp`` overrides).
 
         ``phase`` defaults to the shape heuristic ``qlen > 1 -> prefill``;
         engines should pass it explicitly (a 1-token-prompt admission is
-        still a prefill). ``active`` defaults to ``B``."""
+        still a prefill). ``active`` defaults to ``B``. When ``pp > 1``
+        the step additionally carries its stage-boundary activation
+        traffic (``qlen`` tokens across the schedule's boundary hops —
+        the same convention as ``request_calls``)."""
         if phase is None:
             phase = "prefill" if qlen > 1 else "decode"
         if phase not in PHASES:
             raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
-        self.steps.append((label, 1.0, model_calls(cfg, B, qlen, kvlen, tp)))
+        tp = self.tp if tp is None else tp
+        calls = model_calls(cfg, B, qlen, kvlen, tp)
+        if self.pp > 1:
+            from repro.core.e2e import pp_boundary_hops
+            from repro.predict.api import CommCall
+
+            boundary = pp_boundary_hops(
+                self.pp, self.pp_schedule, self.pp_interleave
+            ) * (B * cfg.d_model * 2.0)
+            calls.append(("pp_boundary", 1, [CommCall("p2p", boundary * qlen, 2)]))
+        self.steps.append((label, 1.0, calls))
         self.meta.append(
-            StepMeta(label, phase, B, qlen, kvlen, B if active is None else active)
+            StepMeta(label, phase, B, qlen, kvlen,
+                     B if active is None else active, tp, self.pp)
         )
 
     def record(self, label: str, calls: list, *, phase: str = "other") -> None:

@@ -180,6 +180,52 @@ def test_pipeline_parallel_matches_sequential():
     )
 
 
+def test_pipeline_1f1b_matches_sequential_at_exact_tick_count():
+    """Interleaved 1F1B == sequential layer stack, and the analytical
+    ``schedule_ticks`` is *minimal*: the executed shard_map schedule run
+    one tick short must fail to complete the last microbatch. Covers a
+    non-divisible microbatch count (M=6 on S=4) and the divisible case."""
+    _run_sub(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import lax
+        from repro.dist.pipeline import pipeline_forward, schedule_ticks
+        mesh = jax.make_mesh((4,), ("pipe",))
+        layer_fn = lambda lp, h: jnp.tanh(h @ lp["w"])
+        def seq(params, x):
+            def body(c, lp):
+                return layer_fn(lp, c), None
+            return jax.vmap(lambda xx: lax.scan(body, xx, params)[0])(x)
+        for n_layers, micro, V in ((16, 8, 2), (16, 6, 2), (8, 1, 2)):
+            ks = jax.random.split(jax.random.PRNGKey(0), n_layers)
+            params = {"w": jax.vmap(lambda k: 0.3*jax.random.normal(k, (16, 16)))(ks)}
+            x = jax.random.normal(jax.random.PRNGKey(1), (micro, 2, 16))
+            out = pipeline_forward(layer_fn, params, x, mesh,
+                                   schedule="1f1b", interleave=V)
+            ref = seq(params, x)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-5, atol=2e-5)
+            t = schedule_ticks(4, micro, "1f1b", V)
+            short = pipeline_forward(layer_fn, params, x, mesh,
+                                     schedule="1f1b", interleave=V, ticks=t - 1)
+            assert not np.allclose(np.asarray(short), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5), (micro, V)
+        # same minimality statement for GPipe's M + S - 1
+        params = {"w": jax.vmap(lambda k: 0.3*jax.random.normal(k, (16, 16)))(
+            jax.random.split(jax.random.PRNGKey(0), 8))}
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 16))
+        ref = seq(params, x)
+        out = pipeline_forward(layer_fn, params, x, mesh)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+        short = pipeline_forward(layer_fn, params, x, mesh,
+                                 ticks=schedule_ticks(4, 4, "gpipe") - 1)
+        assert not np.allclose(np.asarray(short), np.asarray(ref), rtol=2e-5, atol=2e-5)
+        print("OK 1f1b ticks exact")
+        """,
+        devices=4,
+    )
+
+
 def test_elastic_restart_across_device_counts():
     """Checkpoint written under a 4-device mesh restores into a 2-device
     mesh (elastic scaling)."""
