@@ -1,0 +1,144 @@
+"""Fleet-simulator benchmark (ISSUE 6): replay a large synthetic request
+stream through a routed fleet and gate the simulator's queueing physics.
+
+Reports three things:
+
+  * exactness — a single request entering an idle fleet waits zero, so its
+    simulated latency must equal the isolated placement estimate
+    (``FleetRouter`` row ``total_s``) to 1e-9. Criterion (asserted in
+    ``--smoke``);
+  * queueing-delay monotonicity — the same 200k-request stream (common
+    random numbers: one seed, arrivals scaled by rate) replayed at 30/60/90%
+    of the fleet's saturation rate must show non-decreasing p95 latency,
+    strictly increasing from the lightest to the heaviest load. Criterion
+    (asserted in ``--smoke``);
+  * simulation overhead — host wall-clock per simulated request of the
+    discrete-event replay (the O(n log replicas) heap loop). Criterion
+    (asserted in ``--smoke``): under ``OVERHEAD_US_BUDGET`` per request.
+
+Also reported (not gated): the routed assignment of the two-class traffic
+mix, per-hardware utilization at each load point, and an autoscaled replay
+at 90% load (replica trajectory endpoints, p95 vs the fixed pool).
+
+Standalone: ``python -m benchmarks.bench_fleet [--smoke] [--json PATH]``
+(non-zero exit when a smoke criterion fails — the CI gate).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import Csv, get_pipeweave, write_bench_json
+from repro.configs import get_arch
+from repro.predict import FeatureCache
+from repro.serve.fleet import AutoscalePolicy, FleetSimulator, WorkloadClass
+from repro.serve.placement import FleetRouter
+
+N_REQUESTS = 200_000
+LOAD_FRACTIONS = (0.3, 0.6, 0.9)
+REPLICAS = 4
+OVERHEAD_US_BUDGET = 50.0  # generous for shared CI runners; locally ~3us
+SEED = 3
+
+
+def _build_sim() -> FleetSimulator:
+    cfg = get_arch("qwen3-0.6b").smoke()
+    chat = WorkloadClass("chat", cfg, B=1, lin=256, lout=32, weight=3.0)
+    bulk = WorkloadClass("bulk", cfg, B=1, lin=1024, lout=64, weight=1.0)
+    router = FleetRouter(estimator=get_pipeweave(), cache=FeatureCache())
+    return FleetSimulator([chat, bulk], router=router, replicas=REPLICAS)
+
+
+def run(csv: Csv, smoke: bool = False) -> dict:
+    sim = _build_sim()
+    sat = sim.saturation_rate_rps()
+    csv.add("fleet/saturation_rate_rps", 0.0, f"{sat:.1f} req/s, "
+            f"{REPLICAS} replicas, assignment={sim.assignment}")
+
+    # exactness: idle fleet == isolated placement estimate
+    single = sim.replay(arrivals=np.array([0.0]), class_ids=np.array([0]))
+    svc = sim.service_s("chat")
+    exact_err = abs(single.latency_p50_s - svc)
+    csv.add("fleet/empty_fleet_abs_err_s", exact_err,
+            f"sim {single.latency_p50_s:.9g}s vs placement {svc:.9g}s")
+
+    # monotonicity + overhead over the big stream
+    p95s, utils = [], []
+    wall_total = 0.0
+    for frac in LOAD_FRACTIONS:
+        t0 = time.perf_counter()
+        report = sim.replay(rate_rps=frac * sat, n_requests=N_REQUESTS, seed=SEED)
+        wall = time.perf_counter() - t0
+        wall_total += wall
+        p95s.append(report.latency_p95_s)
+        util = max(l.utilization for l in report.per_hw.values())
+        utils.append(util)
+        csv.add(f"fleet/p95_ms_at_{int(frac*100)}pct", report.latency_p95_s * 1e3,
+                f"util {util:.1%}, {N_REQUESTS} reqs in {wall:.2f}s")
+    overhead_us = wall_total / (len(LOAD_FRACTIONS) * N_REQUESTS) * 1e6
+    csv.add("fleet/sim_overhead_us_per_request", overhead_us,
+            f"{len(LOAD_FRACTIONS)}x{N_REQUESTS} requests, {wall_total:.2f}s total")
+
+    # autoscaling at the heaviest load (reported, not gated)
+    policy = AutoscalePolicy(window_s=200 * svc, target_utilization=0.6,
+                             min_replicas=REPLICAS, max_replicas=32)
+    fixed_p95 = p95s[-1]
+    scaled = sim.replay(rate_rps=LOAD_FRACTIONS[-1] * sat,
+                        n_requests=N_REQUESTS, seed=SEED, autoscale=policy)
+    traj = {hw: (l.replicas, l.final_replicas) for hw, l in scaled.per_hw.items()}
+    csv.add("fleet/autoscaled_p95_ms", scaled.latency_p95_s * 1e3,
+            f"fixed {fixed_p95*1e3:.2f}ms, replicas {traj}")
+
+    results = {
+        "n_requests": N_REQUESTS,
+        "assignment": sim.assignment,
+        "saturation_rate_rps": sat,
+        "empty_fleet_abs_err_s": exact_err,
+        "load_fractions": list(LOAD_FRACTIONS),
+        "p95_s": p95s,
+        "max_utilization": utils,
+        "sim_overhead_us_per_request": overhead_us,
+        "autoscaled_p95_s": scaled.latency_p95_s,
+        "autoscale_replicas": traj,
+    }
+    if smoke:
+        assert exact_err <= 1e-9, (
+            f"empty-fleet latency {single.latency_p50_s!r} deviates from the "
+            f"isolated placement estimate {svc!r} by {exact_err:.3g}s > 1e-9"
+        )
+        assert p95s[0] <= p95s[1] <= p95s[2] and p95s[2] > p95s[0], (
+            f"p95 latency not monotone in arrival rate: {p95s} at loads "
+            f"{LOAD_FRACTIONS} of saturation"
+        )
+        assert overhead_us <= OVERHEAD_US_BUDGET, (
+            f"fleet simulation costs {overhead_us:.1f}us per request > "
+            f"{OVERHEAD_US_BUDGET}us budget"
+        )
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert exactness + monotonicity + overhead (CI gate)")
+    ap.add_argument("--json", help="write BENCH_fleet.json-style artifact here")
+    args = ap.parse_args(argv)
+    csv = Csv()
+    print("name,value,derived")
+    try:
+        results = run(csv, smoke=args.smoke)
+        failed = False
+    except AssertionError as e:
+        print(f"# SMOKE FAILURE: {e}", file=sys.stderr)
+        results = {"error": str(e)}
+        failed = True
+    if args.json:
+        write_bench_json(args.json, csv, **results, passed=not failed)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,7 @@ MODULES = [
     ("table9_e2e", "benchmarks.bench_e2e"),
     ("sweep", "benchmarks.bench_sweep"),
     ("placement", "benchmarks.bench_placement"),
+    ("fleet", "benchmarks.bench_fleet"),
     ("parallelism", "benchmarks.bench_parallelism"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

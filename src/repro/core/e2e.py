@@ -403,6 +403,35 @@ def place_request(
                                     pp_interleave))
 
 
+def simulate_fleet(
+    cfg: ArchConfig, B: int, lin: int, lout: int, *,
+    rate_rps: float, n_requests: int,
+    tp: int = 1, pp: int = 1,
+    pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,
+    pp_interleave: int = 2,
+    objective="latency", replicas=1, seed: int = 0, autoscale=None,
+    hws=None, backend: str = "synperf", router=None,
+    **backend_kw,
+):
+    """Replay a Poisson stream of synthetic requests through the fleet
+    with queueing delay: the single-class convenience over
+    ``serve.fleet.FleetSimulator`` (mirrors ``place_request``, which this
+    extends from isolated pricing to queue-aware p50/p95/p99 latency and
+    utilization). Returns a ``serve.fleet.FleetReport``."""
+    from repro.serve.fleet import FleetSimulator, WorkloadClass
+
+    wc = WorkloadClass(
+        "request", cfg, B=B, lin=lin, lout=lout, tp=tp, pp=pp,
+        pp_schedule=pp_schedule, pp_microbatches=pp_microbatches,
+        pp_interleave=pp_interleave,
+    )
+    sim = FleetSimulator(
+        wc, router=router, hws=hws, backend=backend, objective=objective,
+        replicas=replicas, autoscale=autoscale, **backend_kw,
+    )
+    return sim.replay(rate_rps=rate_rps, n_requests=n_requests, seed=seed)
+
+
 def request_latency(
     cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
     pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,

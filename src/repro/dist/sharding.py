@@ -36,6 +36,7 @@ __all__ = [
     "use_mesh",
     "active_mesh",
     "constrain",
+    "mesh_degrees",
 ]
 
 
@@ -57,6 +58,19 @@ _ROLE_AXES: dict[str, tuple[str, ...]] = {
 def _mesh_sizes(mesh) -> dict[str, int]:
     # Mesh and AbstractMesh both expose .shape as an axis-name -> size mapping.
     return dict(mesh.shape)
+
+
+def mesh_degrees(mesh) -> tuple[int, int]:
+    """``(tp, pp)`` of a mesh under the role table: the sizes of the axes
+    the ``"tp"``/``"experts"`` and ``"pipe"`` roles resolve onto
+    (``"model"`` and ``"pipe"``). ``(1, 1)`` for ``mesh=None`` — the
+    degrees a single-process run executes at. This is the single source of
+    truth the serving engines use to report the mesh they actually live on
+    (trace recording, predicted admission)."""
+    if mesh is None:
+        return (1, 1)
+    sizes = _mesh_sizes(mesh)
+    return int(sizes.get("model", 1)), int(sizes.get("pipe", 1))
 
 
 def resolve_pspec(shape: Sequence[int], axis_roles: Sequence[Optional[str]], mesh) -> P:

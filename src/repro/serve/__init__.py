@@ -1,3 +1,4 @@
-"""Serving: continuous batching over prefill/decode steps, trace capture
-(``serve.trace``) feeding the predict layer, and prediction-guided fleet
-placement (``serve.placement``)."""
+"""Serving: continuous batching over prefill/decode steps (mesh-native via
+``engine.mesh=``), trace capture (``serve.trace``) feeding the predict
+layer, prediction-guided fleet placement (``serve.placement``), and
+fleet-scale queueing simulation on top (``serve.fleet``)."""

@@ -5,13 +5,28 @@ performance, so the end-to-end example serves batched requests).
 Single-process implementation with the same structure a multi-host server
 uses: admission by batch, one prefill per admitted batch (right-padded to the
 batch max), then lock-step decode with per-sequence stop handling.
+
+Both engines share a :class:`_ModelRunner` that owns params, caches, the
+jitted prefill/decode steps and sampling — and optionally a mesh. With
+``mesh=`` the engines are *mesh-native*: parameters are placed with
+``dist.sharding.param_pspecs``, KV caches with ``cache_pspecs``, and every
+step traces under ``use_mesh(mesh)`` so the models' ``constrain``
+annotations become real sharding constraints — prefill and decode then
+genuinely execute sharded (verify on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``). The engine's
+parallel degrees (``engine.tp``/``engine.pp``, the mesh's "model"/"pipe"
+axis sizes) flow into an attached ``TraceRecorder`` and into predicted
+admission, so traces and admission decisions are priced at the mesh the
+engine actually runs on rather than a caller-declared one.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 import warnings
-from typing import Callable, Optional
+from collections import deque
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +34,13 @@ import numpy as np
 
 import repro.models.transformer as T
 from repro.configs.base import ArchConfig
+from repro.dist.sharding import (
+    cache_pspecs,
+    mesh_degrees,
+    param_pspecs,
+    to_named,
+    use_mesh,
+)
 from repro.models.registry import build_model
 
 
@@ -36,24 +58,128 @@ class Result:
     tokens: list
     prefill_s: float
     decode_s: float
+    #: scheduler steps the request was resident for (its admission prefill
+    #: plus every decode tick it took a token in) — comparable across the
+    #: batch and continuous engines, and to fleet-simulator service ticks
+    ticks: int = 0
+    #: admission-to-retire wall-clock of this process. For the reference
+    #: CPU engines this is a functional metric only; the fleet simulator's
+    #: queueing latency is the *predicted* analogue on target hardware.
+    latency_s: float = 0.0
 
 
-class ServeEngine:
-    def __init__(self, cfg: ArchConfig, params=None, seed: int = 0, max_batch: int = 8,
-                 recorder=None):
+class _ModelRunner:
+    """Shared prefill/decode/sample machinery for the serving engines.
+
+    Owns the model api, parameters, the jitted step functions and the
+    engine's base PRNG key. With ``mesh=`` the runner places parameters
+    (``param_pspecs``) and caches (``cache_pspecs``) on the mesh and runs
+    every jitted step inside ``use_mesh(mesh)``, so the models' activation
+    ``constrain`` hints resolve against it at trace time. ``tp``/``pp``
+    are the mesh's "model"/"pipe" axis sizes (1 without a mesh) — the
+    degrees every consumer (trace recorder, predicted admission) prices
+    this engine's steps at.
+    """
+
+    def __init__(self, cfg: ArchConfig, *, params=None, seed: int = 0, mesh=None):
         self.cfg = cfg
         self.api = build_model(cfg)
-        self.params = params if params is not None else self.api.init(jax.random.PRNGKey(seed))
-        self.max_batch = max_batch
-        self.queue: list[Request] = []
+        self.mesh = mesh
+        self.tp, self.pp = mesh_degrees(mesh)
+        if params is None:
+            params = self.api.init(jax.random.PRNGKey(seed))
+        if mesh is not None:
+            params = jax.device_put(params, to_named(param_pspecs(params, mesh), mesh))
+        self.params = params
+        self.base_key = jax.random.PRNGKey(seed)
+        self._jit_decode = jax.jit(self.api.decode, donate_argnums=(1,))
+        self._jit_prefill = jax.jit(self.api.prefill)
+
+    def _ctx(self):
+        return use_mesh(self.mesh) if self.mesh is not None else contextlib.nullcontext()
+
+    def prefill(self, batch):
+        with self._ctx():
+            return self._jit_prefill(self.params, batch)
+
+    def decode(self, caches, tokens, positions):
+        with self._ctx():
+            return self._jit_decode(self.params, caches, tokens, positions)
+
+    def shard_cache(self, caches):
+        """Place a cache tree on the mesh (identity without one)."""
+        if self.mesh is None:
+            return caches
+        return jax.device_put(caches, to_named(cache_pspecs(caches, self.mesh), self.mesh))
+
+    def grow_cache(self, caches, max_len: int):
+        """``pad_cache`` to ``max_len`` and (re)place on the mesh — padding
+        concatenates host zeros, which would otherwise decommit the
+        sharding prefill produced."""
+        return self.shard_cache(T.pad_cache(caches, self.cfg, max_len))
+
+    def init_cache(self, batch: int, max_len: int):
+        return self.shard_cache(self.api.init_cache(batch, max_len))
+
+    def sample(self, logits, temperatures, key):
+        """Greedy/categorical per row: ``logits (B, V_padded) -> (B,) int32``.
+        Rows with temperature 0 take the argmax; others sample."""
+        logits = logits[:, : self.cfg.vocab_size]
+        temps = jnp.asarray(temperatures)[:, None]
+        greedy = jnp.argmax(logits, axis=-1)
+        sampled = jax.random.categorical(key, logits / jnp.maximum(temps, 1e-3))
+        return jnp.where(temps[:, 0] > 0, sampled, greedy).astype(jnp.int32)
+
+
+class _EngineBase:
+    """Queue + runner plumbing common to both engines. Exposes the runner's
+    identity (``params``/``mesh``/``tp``/``pp``) and binds an attached
+    recorder to the engine's mesh degrees, so a recorder never needs the
+    caller to declare ``tp=``/``pp=`` for a mesh-native engine."""
+
+    def __init__(self, cfg: ArchConfig, *, params, seed, recorder, mesh):
+        self.cfg = cfg
+        self._runner = _ModelRunner(cfg, params=params, seed=seed, mesh=mesh)
+        self.api = self._runner.api
+        self.queue: deque[Request] = deque()
         # optional serve.trace.TraceRecorder: every executed step also emits
         # its decomposer call sequence (actual launched shapes)
         self.recorder = recorder
-        self._decode = jax.jit(self.api.decode, donate_argnums=(1,))
-        self._prefill = jax.jit(self.api.prefill)
+        if recorder is not None and mesh is not None:
+            recorder.bind_mesh(self._runner.tp, self._runner.pp)
+
+    @property
+    def params(self):
+        return self._runner.params
+
+    @params.setter
+    def params(self, value):
+        self._runner.params = value
+
+    @property
+    def mesh(self):
+        return self._runner.mesh
+
+    @property
+    def tp(self) -> int:
+        """Tensor-parallel degree the engine executes at (the mesh's
+        "model" axis size; 1 single-process)."""
+        return self._runner.tp
+
+    @property
+    def pp(self) -> int:
+        return self._runner.pp
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+
+class ServeEngine(_EngineBase):
+    def __init__(self, cfg: ArchConfig, params=None, seed: int = 0, max_batch: int = 8,
+                 recorder=None, mesh=None):
+        super().__init__(cfg, params=params, seed=seed, recorder=recorder, mesh=mesh)
+        self.max_batch = max_batch
+        self._batch_idx = 0  # folds into the engine seed for per-batch keys
 
     # ------------------------------------------------------------------
     def _pad_batch(self, prompts: list[np.ndarray]):
@@ -82,27 +208,34 @@ class ServeEngine:
         """Admit up to max_batch requests, serve them to completion."""
         if not self.queue:
             return []
-        batch_reqs = self.queue[: self.max_batch]
-        self.queue = self.queue[self.max_batch :]
+        batch_reqs = [
+            self.queue.popleft()
+            for _ in range(min(self.max_batch, len(self.queue)))
+        ]
         B = len(batch_reqs)
         toks, lens, L = self._pad_batch([r.prompt for r in batch_reqs])
         max_new = max(r.max_new for r in batch_reqs)
+        # every batch samples under its own key chain: the engine seed
+        # folded with a batch counter (identical seeds still reproduce)
+        key = jax.random.fold_in(self._runner.base_key, self._batch_idx)
+        self._batch_idx += 1
+        key, extra_key = jax.random.split(key)
 
         t0 = time.perf_counter()
         if self.recorder is not None:
             self.recorder.record_step(
                 f"prefill[b{B}xL{L}]", self.cfg, B, L, L, phase="prefill"
             )
-        batch = {"tokens": toks, **self._extra_inputs(B, jax.random.PRNGKey(1))}
-        logits, caches = self._prefill(self.params, batch)
-        caches = T.pad_cache(caches, self.cfg, L + max_new)
+        batch = {"tokens": toks, **self._extra_inputs(B, extra_key)}
+        logits, caches = self._runner.prefill(batch)
+        caches = self._runner.grow_cache(caches, L + max_new)
         jax.block_until_ready(logits)
         prefill_s = time.perf_counter() - t0
 
-        key = jax.random.PRNGKey(17)
         outputs: list[list[int]] = [[] for _ in range(B)]
         t0 = time.perf_counter()
-        cur = self._sample(logits, batch_reqs, key)
+        key, sub = jax.random.split(key)
+        cur = self._sample(logits, batch_reqs, sub)
         for i in range(B):
             outputs[i].append(int(cur[i]))
         for step in range(max_new - 1):
@@ -120,7 +253,7 @@ class ServeEngine:
                     f"decode@{L + step}", self.cfg, B, 1, L + step + 1,
                     phase="decode", active=still,
                 )
-            logits, caches = self._decode(self.params, caches, cur, pos)
+            logits, caches = self._runner.decode(caches, cur, pos)
             key, sub = jax.random.split(key)
             cur = self._sample(logits, batch_reqs, sub)
             for i in range(B):
@@ -129,16 +262,17 @@ class ServeEngine:
         jax.block_until_ready(cur)
         decode_s = time.perf_counter() - t0
         return [
-            Result(r.rid, outputs[i], prefill_s, decode_s)
+            Result(
+                r.rid, outputs[i], prefill_s, decode_s,
+                ticks=len(outputs[i]), latency_s=prefill_s + decode_s,
+            )
             for i, r in enumerate(batch_reqs)
         ]
 
     def _sample(self, logits, reqs, key):
-        logits = logits[:, : self.cfg.vocab_size]
-        temps = jnp.asarray([r.temperature for r in reqs])[:, None]
-        greedy = jnp.argmax(logits, axis=-1)
-        sampled = jax.random.categorical(key, logits / jnp.maximum(temps, 1e-3))
-        return jnp.where(temps[:, 0] > 0, sampled, greedy).astype(jnp.int32)
+        return self._runner.sample(
+            logits, [r.temperature for r in reqs], key
+        )
 
 
 @dataclasses.dataclass
@@ -147,13 +281,16 @@ class _Slot:
     pos: int = 0  # next write position (absolute, excl. meta)
     emitted: Optional[list] = None
     cur: int = 0  # last sampled token
+    t_admit: float = 0.0  # perf_counter at admission (residency metrics)
+    prefill_s: float = 0.0
+    ticks: int = 0  # scheduler steps this request took a token in
 
     @property
     def free(self) -> bool:
         return self.req is None
 
 
-class ContinuousBatchingEngine:
+class ContinuousBatchingEngine(_EngineBase):
     """In-flight batching: a fixed pool of decode slots steps in lock-step;
     finished requests free their slot and waiting requests are admitted at
     the next step boundary (each admission prefills into its slot's region
@@ -183,7 +320,9 @@ class ContinuousBatchingEngine:
         ``repro.predict`` backend) for the decode-tick latency of the
         would-be batch at its **worst-case future KV span** (every active
         slot and the candidate projected to their final positions), and
-        admit only while that stays within ``decode_slo_s``. Predicted
+        admit only while that stays within ``decode_slo_s``. Steps are
+        priced at the engine's actual parallel degrees (``self.tp`` — the
+        mesh's "model" axis size for a mesh-native engine). Predicted
         latency grows with the KV span (up to scheduler-quantization
         wiggle of a fraction of a percent — size the SLO with that
         margin), so a request admitted under the SLO keeps every
@@ -205,7 +344,7 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ArchConfig, *, slots: int = 4, max_len: int = 128,
                  params=None, seed: int = 0, recorder=None,
                  admission: str = "fixed", predictor=None,
-                 decode_slo_s: Optional[float] = None):
+                 decode_slo_s: Optional[float] = None, mesh=None):
         assert cfg.family not in ("ssm", "hybrid", "audio", "vlm"), (
             "reference continuous-batching engine supports KV-cache LMs"
         )
@@ -217,11 +356,8 @@ class ContinuousBatchingEngine:
                 "backend for the target hardware) and decode_slo_s= (the "
                 "per-tick decode latency SLO in predicted seconds)"
             )
-        self.cfg = cfg
-        self.api = build_model(cfg)
-        self.params = params if params is not None else self.api.init(jax.random.PRNGKey(seed))
+        super().__init__(cfg, params=params, seed=seed, recorder=recorder, mesh=mesh)
         self.max_len = max_len
-        self.recorder = recorder
         self.admission = admission
         self.predictor = predictor
         self.decode_slo_s = decode_slo_s
@@ -231,15 +367,9 @@ class ContinuousBatchingEngine:
         self.slo_forced_admits = 0
         self.admission_fallback_reason: Optional[str] = None
         self.slots = [_Slot() for _ in range(slots)]
-        self.caches = self.api.init_cache(slots, max_len)
-        self.queue: list[Request] = []
+        self.caches = self._runner.init_cache(slots, max_len)
         self.done: list[Result] = []
-        self._decode = jax.jit(self.api.decode, donate_argnums=(1,))
-        self._prefill = jax.jit(self.api.prefill)
         self._key = jax.random.PRNGKey(seed + 1)
-
-    def submit(self, req: Request):
-        self.queue.append(req)
 
     # ------------------------------------------------------------------
     # predicted admission
@@ -260,14 +390,15 @@ class ContinuousBatchingEngine:
 
     def _predicted_tick_s(self, kv: int) -> Optional[float]:
         """Predicted decode-tick latency (seconds on the predictor's
-        hardware) for the full slot pool attending ``kv``; None when the
-        predictor cannot price the step (the engine has then already
-        fallen back to fixed admission)."""
+        hardware) for the full slot pool attending ``kv``, priced at the
+        engine's actual tensor-parallel degree; None when the predictor
+        cannot price the step (the engine has then already fallen back to
+        fixed admission)."""
         from repro.core.e2e import model_calls
 
         try:
             return self.predictor.predict(
-                model_calls(self.cfg, len(self.slots), 1, kv, tp=1)
+                model_calls(self.cfg, len(self.slots), 1, kv, tp=self.tp)
             ).total_s
         except RuntimeError as e:  # unfitted estimator / comm regressor
             self.admission_fallback_reason = f"{type(e).__name__}: {e}"
@@ -320,16 +451,17 @@ class ContinuousBatchingEngine:
                 continue
             if not self._admit_ok(self.queue[0]):
                 break  # FIFO: a deferred head is retried next tick
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             L = len(req.prompt)
+            t0 = time.perf_counter()
             if self.recorder is not None:
                 # per-slot admission prefills recompute the prompt alone
                 self.recorder.record_step(
                     f"admit#{req.rid}[L{L}]", self.cfg, 1, L, L, phase="prefill"
                 )
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
-            logits, cache1 = self._prefill(self.params, batch)
-            cache1 = T.pad_cache(cache1, self.cfg, self.max_len)
+            logits, cache1 = self._runner.prefill(batch)
+            cache1 = self._runner.grow_cache(cache1, self.max_len)
             # copy this request's KV rows into slot i of the shared cache
             # (supported families' cache leaves are (n_layers, B, S, H, D):
             # the slot axis is always 1)
@@ -340,7 +472,9 @@ class ContinuousBatchingEngine:
             )
             self._key, sub = jax.random.split(self._key)
             tok = self._sample_one(logits[0], req, sub)
+            now = time.perf_counter()
             slot.req, slot.pos, slot.emitted, slot.cur = req, L, [tok], tok
+            slot.t_admit, slot.prefill_s, slot.ticks = t0, now - t0, 1
 
     def _sample_one(self, logits, req, key) -> int:
         logits = logits[: self.cfg.vocab_size]
@@ -367,7 +501,7 @@ class ContinuousBatchingEngine:
                 self.cfg, len(self.slots), 1, kv,
                 phase="decode", active=len(active),
             )
-        logits, self.caches = self._decode(self.params, self.caches, toks, pos)
+        logits, self.caches = self._runner.decode(self.caches, toks, pos)
         for i in active:
             s = self.slots[i]
             self._key, sub = jax.random.split(self._key)
@@ -375,8 +509,16 @@ class ContinuousBatchingEngine:
             s.emitted.append(tok)
             s.pos += 1
             s.cur = tok
+            s.ticks += 1
             if len(s.emitted) >= s.req.max_new or s.pos >= self.max_len - 1:
-                self.done.append(Result(s.req.rid, s.emitted, 0.0, 0.0))
+                now = time.perf_counter()
+                self.done.append(
+                    Result(
+                        s.req.rid, s.emitted, s.prefill_s,
+                        max(now - s.t_admit - s.prefill_s, 0.0),
+                        ticks=s.ticks, latency_s=now - s.t_admit,
+                    )
+                )
                 self.slots[i] = _Slot()
         return True
 
@@ -385,5 +527,3 @@ class ContinuousBatchingEngine:
             self.step()
         out, self.done = self.done, []
         return out
-
-

@@ -243,6 +243,34 @@ class FleetRouter:
             estimates[hw.name] = est if scale == 1.0 else est.scaled(scale)
         return self._rank(estimates, obj, n_tokens, skipped)
 
+    def route_many(
+        self,
+        named_calls: dict,
+        *,
+        objective=None,
+        n_tokens: Optional[dict] = None,
+        scales: Optional[dict] = None,
+    ) -> dict:
+        """Route several named workloads through the shared sweep cache:
+        ``{name: call sequence} -> {name: Placement}``. ``n_tokens`` and
+        ``scales`` are optional per-name mappings (generated-token count
+        for per-token objectives; estimate scale, e.g. a PP bubble
+        surcharge). The names are workload *classes* in the fleet-simulator
+        sense (``serve.fleet``) — every class is priced against one warmed
+        ``FeatureCache``, so routing a whole traffic mix costs barely more
+        than one combined route."""
+        n_tokens = n_tokens or {}
+        scales = scales or {}
+        return {
+            name: self.route(
+                calls,
+                objective=objective,
+                n_tokens=n_tokens.get(name),
+                scale=scales.get(name, 1.0),
+            )
+            for name, calls in named_calls.items()
+        }
+
     def route_trace(self, recorder, *, objective=None, scale: float = 1.0) -> Placement:
         """Route a live ``TraceRecorder``: the recorded call groups with
         ``n_tokens`` taken from the recorder's generated-token count

@@ -45,6 +45,7 @@ The recorder is deliberately cheap: it builds the nested call groups
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 from repro.configs.base import ArchConfig
@@ -74,6 +75,8 @@ class StepMeta:
     qlen: int
     kvlen: int
     active: int
+    #: resolved at record time: the engine's mesh degrees when the
+    #: recorder is bound to a mesh-native engine, else the declared ones
     tp: int = 1
     pp: int = 1
 
@@ -83,24 +86,65 @@ class TraceRecorder:
     """Accumulates one nested call group per executed engine step, plus a
     parallel :class:`StepMeta` per step (``meta``).
 
-    ``tp``/``pp`` declare the mesh the trace should be *priced at*: the
-    reference engines execute single-process (tp=1), but a recorder
-    constructed with ``TraceRecorder(tp=4, pp=2)`` lowers every recorded
-    step at those parallel degrees, so the trace carries the TP
+    The parallel degrees a trace is *priced at* come from the engine it is
+    attached to: an engine constructed with ``mesh=`` calls
+    :meth:`bind_mesh` with its mesh's "model"/"pipe" axis sizes, and every
+    recorded step lowers at those degrees — the trace then carries the TP
     all-reduces/all-gathers, the MoE expert-parallel dispatch/combine
     all-to-alls (byte-exact — ``core.e2e.layer_calls``) and the PP
-    stage-boundary activations. Recorded traces therefore price
-    collective costs through ``SweepPredictor``/``FleetRouter`` exactly
-    like synthetic ``request_calls`` do. A per-step ``tp=`` argument to
-    :meth:`record_step` overrides the declared degree."""
+    stage-boundary activations of the mesh the engine actually runs on.
+    Recorded traces therefore price collective costs through
+    ``SweepPredictor``/``FleetRouter`` exactly like synthetic
+    ``request_calls`` do.
+
+    Caller-declared degrees (``TraceRecorder(tp=4, pp=2)``) are kept as a
+    *deprecation shim* for pricing a single-process run at a hypothetical
+    mesh; they apply only when no engine mesh is bound. When a declared
+    degree conflicts with a bound mesh, the mesh wins and a
+    ``DeprecationWarning`` is raised — the engine's reality is
+    authoritative. A per-step ``tp=`` argument to :meth:`record_step`
+    overrides both."""
 
     steps: list = dataclasses.field(default_factory=list)
     meta: list = dataclasses.field(default_factory=list)
-    tp: int = 1
-    pp: int = 1
+    #: declared degrees (deprecation shim); ``None`` = inherit from the
+    #: engine's mesh (1 when the engine has none)
+    tp: Optional[int] = None
+    pp: Optional[int] = None
     #: pipeline schedule the PP boundary traffic is recorded for
     pp_schedule: str = "gpipe"
     pp_interleave: int = 2
+    _mesh_tp: Optional[int] = dataclasses.field(default=None, init=False, repr=False)
+    _mesh_pp: Optional[int] = dataclasses.field(default=None, init=False, repr=False)
+
+    def bind_mesh(self, tp: int, pp: int = 1) -> None:
+        """Bind the recorder to an engine's actual mesh degrees. Called by
+        engines constructed with ``mesh=``; callers never need to. Bound
+        degrees are authoritative: a conflicting declared ``tp=``/``pp=``
+        raises a ``DeprecationWarning`` and loses."""
+        if (self.tp not in (None, tp)) or (self.pp not in (None, pp)):
+            warnings.warn(
+                f"TraceRecorder declared tp={self.tp}/pp={self.pp} but the "
+                f"engine's mesh runs tp={tp}/pp={pp}; the mesh wins. "
+                "Declared degrees are deprecated for mesh-native engines — "
+                "drop them and let the recorder inherit from the engine.",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        self._mesh_tp, self._mesh_pp = int(tp), int(pp)
+
+    @property
+    def resolved_tp(self) -> int:
+        """The TP degree steps record at: engine-mesh bound > declared > 1."""
+        if self._mesh_tp is not None:
+            return self._mesh_tp
+        return 1 if self.tp is None else self.tp
+
+    @property
+    def resolved_pp(self) -> int:
+        if self._mesh_pp is not None:
+            return self._mesh_pp
+        return 1 if self.pp is None else self.pp
 
     def record_step(
         self,
@@ -116,32 +160,33 @@ class TraceRecorder:
     ) -> None:
         """Record one executed step as the decomposer's call sequence for
         its shapes (all layers + LM head, the ``model_calls`` lowering),
-        at the recorder's declared parallel degrees (``tp`` overrides).
+        at the recorder's resolved parallel degrees (``tp`` overrides).
 
         ``phase`` defaults to the shape heuristic ``qlen > 1 -> prefill``;
         engines should pass it explicitly (a 1-token-prompt admission is
-        still a prefill). ``active`` defaults to ``B``. When ``pp > 1``
-        the step additionally carries its stage-boundary activation
-        traffic (``qlen`` tokens across the schedule's boundary hops —
-        the same convention as ``request_calls``)."""
+        still a prefill). ``active`` defaults to ``B``. When the resolved
+        ``pp > 1`` the step additionally carries its stage-boundary
+        activation traffic (``qlen`` tokens across the schedule's boundary
+        hops — the same convention as ``request_calls``)."""
         if phase is None:
             phase = "prefill" if qlen > 1 else "decode"
         if phase not in PHASES:
             raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
-        tp = self.tp if tp is None else tp
+        tp = self.resolved_tp if tp is None else tp
+        pp = self.resolved_pp
         calls = model_calls(cfg, B, qlen, kvlen, tp)
-        if self.pp > 1:
+        if pp > 1:
             from repro.core.e2e import pp_boundary_hops
             from repro.predict.api import CommCall
 
             boundary = pp_boundary_hops(
-                self.pp, self.pp_schedule, self.pp_interleave
+                pp, self.pp_schedule, self.pp_interleave
             ) * (B * cfg.d_model * 2.0)
             calls.append(("pp_boundary", 1, [CommCall("p2p", boundary * qlen, 2)]))
         self.steps.append((label, 1.0, calls))
         self.meta.append(
             StepMeta(label, phase, B, qlen, kvlen,
-                     B if active is None else active, tp, self.pp)
+                     B if active is None else active, tp, pp)
         )
 
     def record(self, label: str, calls: list, *, phase: str = "other") -> None:

@@ -1,0 +1,163 @@
+"""Fleet-simulator queueing sanity (ISSUE 6): the discrete-event replay in
+``serve.fleet`` against M/D/1-style ground truths — empty-queue latency is
+exactly the isolated placement estimate, latency grows with arrival rate,
+replicas and autoscaling relieve queueing."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.serve.fleet import (
+    AutoscalePolicy,
+    FleetSimulator,
+    WorkloadClass,
+    poisson_arrivals,
+    simulate_queue,
+)
+
+HWS = ["tpu-v5e", "tpu-v6e"]
+
+
+@pytest.fixture(scope="module")
+def sim():
+    cfg = get_arch("qwen3-0.6b").smoke()
+    return FleetSimulator(
+        [WorkloadClass("chat", cfg, B=1, lin=32, lout=8)],
+        hws=HWS, backend="oracle", replicas=2,
+    )
+
+
+# ----------------------------------------------------------------------
+# simulate_queue unit truths
+# ----------------------------------------------------------------------
+
+
+def test_single_server_fifo_hand_computed():
+    starts, traj, capacity = simulate_queue(
+        np.array([0.0, 1.0, 2.0]), np.array([2.0, 2.0, 2.0]), replicas=1
+    )
+    assert list(starts) == [0.0, 2.0, 4.0]
+    assert traj == [(0.0, 1)]
+    assert capacity == 6.0  # 1 replica x horizon (last completion at 6)
+
+
+def test_extra_replicas_absorb_overlap():
+    starts, _, _ = simulate_queue(
+        np.array([0.0, 1.0, 2.0]), np.array([2.0, 2.0, 2.0]), replicas=2
+    )
+    assert list(starts) == [0.0, 1.0, 2.0]  # never waits
+
+
+def test_poisson_arrivals_scale_with_rate():
+    a1 = poisson_arrivals(10.0, 1000, seed=7)
+    a2 = poisson_arrivals(20.0, 1000, seed=7)
+    # common random numbers: doubling the rate halves every arrival time
+    np.testing.assert_allclose(a2, a1 / 2.0, rtol=1e-12)
+    assert np.all(np.diff(a1) > 0)
+
+
+# ----------------------------------------------------------------------
+# fleet replay sanity
+# ----------------------------------------------------------------------
+
+
+def test_empty_fleet_latency_is_isolated_estimate(sim):
+    """A request entering an idle fleet waits zero, so its simulated
+    latency is the placement row's total_s bit-for-bit — the acceptance
+    anchor (<= 1e-9, actually exact)."""
+    report = sim.replay(arrivals=np.array([0.0]))
+    svc = sim.service_s("chat")
+    assert abs(report.latency_p50_s - svc) <= 1e-9
+    assert report.per_hw[sim.assignment["chat"]].wait_mean_s == 0.0
+
+
+def test_latency_monotone_in_arrival_rate(sim):
+    sat = sim.saturation_rate_rps()
+    p95 = [
+        sim.replay(rate_rps=f * sat, n_requests=20_000, seed=3).latency_p95_s
+        for f in (0.3, 0.6, 0.9)
+    ]
+    assert p95[0] <= p95[1] <= p95[2]
+    assert p95[2] > p95[0]  # queueing genuinely bites near saturation
+
+
+def test_more_replicas_cut_waiting():
+    cfg = get_arch("qwen3-0.6b").smoke()
+    wc = WorkloadClass("chat", cfg, B=1, lin=32, lout=8)
+    small = FleetSimulator([wc], hws=HWS, backend="oracle", replicas=1)
+    big = FleetSimulator([wc], hws=HWS, backend="oracle", replicas=4)
+    rate = 0.8 * small.saturation_rate_rps()
+    hw = small.assignment["chat"]
+    wait_small = small.replay(rate_rps=rate, n_requests=10_000, seed=5).per_hw[hw].wait_mean_s
+    wait_big = big.replay(rate_rps=rate, n_requests=10_000, seed=5).per_hw[hw].wait_mean_s
+    assert wait_big < wait_small
+
+
+def test_replay_is_deterministic_and_conserves_requests(sim):
+    r1 = sim.replay(rate_rps=100.0, n_requests=5_000, seed=11)
+    r2 = sim.replay(rate_rps=100.0, n_requests=5_000, seed=11)
+    assert r1.latency_p95_s == r2.latency_p95_s
+    assert r1.n_requests == 5_000
+    assert sum(l.n_requests for l in r1.per_hw.values()) == 5_000
+    hw = sim.assignment["chat"]
+    assert 0.0 < r1.per_hw[hw].utilization <= 1.0
+    assert np.all(r1.latencies >= sim.service_s("chat") - 1e-12)
+
+
+def test_recorded_arrivals_any_order(sim):
+    arr = poisson_arrivals(200.0, 2_000, seed=2)
+    shuffled = arr.copy()
+    np.random.default_rng(0).shuffle(shuffled)
+    a = sim.replay(arrivals=arr, class_ids=np.zeros(len(arr), int))
+    b = sim.replay(arrivals=shuffled, class_ids=np.zeros(len(arr), int))
+    assert a.latency_p95_s == b.latency_p95_s
+
+
+def test_assignment_follows_router(sim):
+    cls = sim.classes[0]
+    placement = sim.router.route(
+        cls.calls(), objective="latency", n_tokens=cls.n_tokens, scale=cls.bubble()
+    )
+    assert sim.assignment["chat"] == placement.best
+    assert sim.service_s("chat") == placement[placement.best].total_s
+
+
+def test_autoscale_grows_pool_under_load(sim):
+    sat = sim.saturation_rate_rps()
+    svc = sim.service_s("chat")
+    policy = AutoscalePolicy(
+        window_s=20 * svc, target_utilization=0.5, min_replicas=2, max_replicas=16
+    )
+    fixed = sim.replay(rate_rps=0.9 * sat, n_requests=20_000, seed=3)
+    scaled = sim.replay(rate_rps=0.9 * sat, n_requests=20_000, seed=3, autoscale=policy)
+    hw = sim.assignment["chat"]
+    assert scaled.per_hw[hw].final_replicas > scaled.per_hw[hw].replicas
+    assert scaled.latency_p95_s <= fixed.latency_p95_s
+    # trajectory is recorded for inspection
+    assert len(scaled.per_hw[hw].replica_traj) > 1
+
+
+def test_multi_class_mix_routes_and_replays():
+    cfg = get_arch("qwen3-0.6b").smoke()
+    chat = WorkloadClass("chat", cfg, B=1, lin=32, lout=8, weight=3.0)
+    bulk = WorkloadClass("bulk", cfg, B=1, lin=96, lout=24, weight=1.0)
+    sim = FleetSimulator([chat, bulk], hws=HWS, backend="oracle", replicas=2)
+    assert set(sim.assignment) == {"chat", "bulk"}
+    assert sim.service_s("bulk") > sim.service_s("chat")
+    report = sim.replay(rate_rps=0.5 * sim.saturation_rate_rps(),
+                        n_requests=8_000, seed=1)
+    # the 3:1 mix shows up in the replayed stream
+    names = [n for load in report.per_hw.values() for n in load.classes]
+    assert "chat" in names and "bulk" in names
+    assert report.table()
+
+
+def test_simulate_fleet_convenience():
+    from repro.core.e2e import simulate_fleet
+
+    cfg = get_arch("qwen3-0.6b").smoke()
+    report = simulate_fleet(
+        cfg, 1, 32, 8, rate_rps=50.0, n_requests=2_000,
+        hws=HWS, backend="oracle", replicas=2, seed=0,
+    )
+    assert report.n_requests == 2_000
+    assert report.latency_p99_s >= report.latency_p95_s >= report.latency_p50_s > 0
