@@ -8,7 +8,6 @@ FlashAttention workloads, plus the CTA/task-count consistency check
 (paper §VI-B 'fully consistent')."""
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

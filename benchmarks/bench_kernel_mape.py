@@ -5,7 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Csv, get_all_datasets, get_baseline, get_pipeweave
-from repro.core.dataset import KERNELS, SEEN, mape
+from repro.core.dataset import SEEN, mape
 
 BASELINE_NAMES = ("roofline", "linear", "habitat", "neusight")
 

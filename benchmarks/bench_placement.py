@@ -35,7 +35,7 @@ import numpy as np
 
 from benchmarks.common import Csv, decode_sweep_trace, get_pipeweave, write_bench_json
 from repro.configs import get_arch
-from repro.core.hardware import REGISTRY, get_hw
+from repro.core.hardware import get_hw
 from repro.predict import FeatureCache, get_predictor
 from repro.serve.placement import FleetRouter
 

@@ -7,9 +7,8 @@ import os
 import pickle
 import time
 
-import numpy as np
 
-from repro.core.dataset import KERNELS, build_dataset, mape
+from repro.core.dataset import KERNELS, build_dataset
 from repro.core.estimator import PipeWeave, train_pipeweave
 from repro.core.hardware import TPUSpec
 from repro.predict import CommRegressor, FeatureCache, get_predictor

@@ -11,14 +11,10 @@ XLA).
 Run: PYTHONPATH=src python examples/crosscheck_dryrun.py [--dir results/dryrun]
 """
 import argparse
-import glob
-import json
-import os
 
 from repro.configs import SHAPES, get_arch
-from repro.core.e2e import KernelCall, model_calls, oracle_times
-from repro.core.hardware import get_hw
-from repro.roofline.analysis import PEAK_FLOPS, load_rows
+from repro.core.e2e import KernelCall, model_calls
+from repro.roofline.analysis import load_rows
 
 
 def analytic_flops_per_device(arch, shape_name, n_devices):

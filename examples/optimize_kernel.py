@@ -4,7 +4,6 @@ underperforming fused-MoE configurations and close the gap by autotuning
 
 Run: PYTHONPATH=src python examples/optimize_kernel.py
 """
-import numpy as np
 
 from repro.core.dataset import build_dataset
 from repro.core.quantile import perf_gap, train_ceiling

@@ -37,7 +37,7 @@ def main():
     print(f"  finished at step {step}")
 
     print("reference: uninterrupted 20-step run ...")
-    import shutil, tempfile as tf
+    import tempfile as tf
 
     c = Trainer(
         cfg,

@@ -1,0 +1,69 @@
+"""Static auditor: device-free checks that catch model/prediction drift
+before anything compiles or serves.
+
+Four check families (see :mod:`repro.analysis.diagnostics` for the code
+table):
+
+* ``conservation`` (SP1xx) — analytical FLOP/byte ledgers vs the
+  decomposer's per-call output;
+* ``kernel-resource`` (SP2xx) — Pallas grid/BlockSpec geometry vs each
+  ``TPUSpec``'s VMEM;
+* ``sharding`` (SP3xx) — PartitionSpec trees vs a mesh shape;
+* ``coverage`` (SP4xx) — emitted call vocabulary vs what backends price.
+
+Run the full audit with ``python -m repro.analysis --all --strict``.
+"""
+from repro.analysis.audit import CHECK_FAMILIES, AuditShape, audit_arch, run_audit
+from repro.analysis.conservation import (
+    check_conservation,
+    check_dryrun_artifacts,
+    check_ep_alltoall,
+    check_head_accounting,
+    check_task_conservation,
+)
+from repro.analysis.coverage import (
+    E2E_FAMILIES,
+    audit_comm_regressor,
+    audit_predictor,
+    check_coverage,
+)
+from repro.analysis.diagnostics import (
+    SEVERITIES,
+    AuditError,
+    Diagnostic,
+    json_report,
+    render_report,
+    sort_diagnostics,
+    worst_severity,
+)
+from repro.analysis.kernels import KERNEL_HELPERS, check_kernel_resources, kernel_workloads
+from repro.analysis.sharding import PRODUCTION_MESH_SIZES, MeshShape, check_sharding
+
+__all__ = [
+    "AuditError",
+    "AuditShape",
+    "CHECK_FAMILIES",
+    "Diagnostic",
+    "E2E_FAMILIES",
+    "KERNEL_HELPERS",
+    "MeshShape",
+    "PRODUCTION_MESH_SIZES",
+    "SEVERITIES",
+    "audit_arch",
+    "audit_comm_regressor",
+    "audit_predictor",
+    "check_conservation",
+    "check_coverage",
+    "check_dryrun_artifacts",
+    "check_ep_alltoall",
+    "check_head_accounting",
+    "check_kernel_resources",
+    "check_sharding",
+    "check_task_conservation",
+    "json_report",
+    "kernel_workloads",
+    "render_report",
+    "run_audit",
+    "sort_diagnostics",
+    "worst_severity",
+]

@@ -8,7 +8,6 @@ tests.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 

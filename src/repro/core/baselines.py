@@ -15,17 +15,15 @@ PipeWeave's analytical components where their design allows:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 
 import numpy as np
 
-from repro.core.dataset import KernelDataset, SEEN, featurize
-from repro.core.decomposer import SCHED_POLICY, decompose
-from repro.core.features import PIPES, analyze, throughput
+from repro.core.dataset import KernelDataset, SEEN
+from repro.core.decomposer import decompose
+from repro.core.features import PIPES, throughput
 from repro.core.hardware import REGISTRY, TPUSpec
 from repro.core.nn import fit_mlp
-from repro.core.scheduler import schedule
 
 
 # ----------------------------------------------------------------------

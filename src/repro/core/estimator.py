@@ -9,8 +9,8 @@ import pickle
 
 import numpy as np
 
-from repro.core.dataset import KernelDataset, build_dataset, featurize, SEEN
-from repro.core.hardware import REGISTRY, TPUSpec
+from repro.core.dataset import KernelDataset, featurize, SEEN
+from repro.core.hardware import TPUSpec
 from repro.core.nn import TrainedMLP, fit_mlp
 
 

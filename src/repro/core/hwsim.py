@@ -25,7 +25,7 @@ import hashlib
 
 import numpy as np
 
-from repro.core.decomposer import SCHED_POLICY, TaskArray, decompose, default_moe_config
+from repro.core.decomposer import SCHED_POLICY, decompose, default_moe_config
 from repro.core.hardware import TPUSpec
 from repro.core.scheduler import schedule
 

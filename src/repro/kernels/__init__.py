@@ -11,3 +11,16 @@ def tpu_compiler_params(**kwargs):
 
     cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
     return cls(**kwargs)
+
+
+def largest_divisor_block(total: int, block: int) -> int:
+    """Largest divisor of ``total`` that is ``<= block`` (and >= 1).
+
+    The block-clamping rule shared by the scaled_mm / rmsnorm / silu_mul
+    kernels and their static ``grid_shape``/``vmem_footprint`` helpers:
+    these kernels never launch a ragged grid — they shrink the block until
+    it divides the dimension. (flash_attention and fused_moe instead
+    *assert* divisibility after a plain ``min`` clamp; their helpers raise
+    ``ValueError`` where the kernel would assert.)"""
+    block = min(block, total)
+    return next(b for b in range(block, 0, -1) if total % b == 0)

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import largest_divisor_block
+
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -20,9 +22,7 @@ def rmsnorm_pallas(x, w, *, eps: float = 1e-6, block_rows: int = 256, interpret:
     d = x.shape[-1]
     xf = x.reshape(-1, d)
     R = xf.shape[0]
-    block_rows = min(block_rows, R)
-    if R % block_rows:
-        block_rows = next(b for b in range(block_rows, 0, -1) if R % b == 0)
+    block_rows = largest_divisor_block(R, block_rows)
     out = pl.pallas_call(
         functools.partial(_rmsnorm_kernel, eps=eps),
         grid=(R // block_rows,),

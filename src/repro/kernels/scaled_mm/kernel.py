@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tpu_compiler_params
+from repro.kernels import largest_divisor_block, tpu_compiler_params
 
 
 def _scaled_mm_kernel(
@@ -59,12 +59,9 @@ def scaled_mm_pallas(
 ):
     M, K = x.shape
     N = w.shape[1]
-
-    def _fit(total, blk):  # largest divisor of total that is <= blk
-        blk = min(blk, total)
-        return next(b for b in range(blk, 0, -1) if total % b == 0)
-
-    block_m, block_n, block_k = _fit(M, block_m), _fit(N, block_n), _fit(K, block_k)
+    block_m = largest_divisor_block(M, block_m)
+    block_n = largest_divisor_block(N, block_n)
+    block_k = largest_divisor_block(K, block_k)
     n_k = K // block_k
     return pl.pallas_call(
         functools.partial(_scaled_mm_kernel, n_k=n_k),

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import largest_divisor_block
+
 
 def _silu_mul_kernel(g_ref, u_ref, o_ref, *, act: str):
     g = g_ref[...].astype(jnp.float32)
@@ -18,14 +20,12 @@ def _silu_mul_kernel(g_ref, u_ref, o_ref, *, act: str):
     o_ref[...] = (h * u).astype(o_ref.dtype)
 
 
-def silu_mul_pallas(g, u, *, act: str = "silu", block_rows: int = 256, interpret: bool = True):
+def silu_mul_pallas(g, u, *, act: str = "silu", block_rows: int = 128, interpret: bool = True):
     orig_shape = g.shape
     d = g.shape[-1]
     gf, uf = g.reshape(-1, d), u.reshape(-1, d)
     R = gf.shape[0]
-    block_rows = min(block_rows, R)
-    if R % block_rows:
-        block_rows = next(b for b in range(block_rows, 0, -1) if R % b == 0)
+    block_rows = largest_divisor_block(R, block_rows)
     out = pl.pallas_call(
         functools.partial(_silu_mul_kernel, act=act),
         grid=(R // block_rows,),

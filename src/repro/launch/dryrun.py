@@ -25,8 +25,7 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs import SHAPES, all_cells, get_arch
 from repro.dist.sharding import (

@@ -7,7 +7,6 @@ doubles as the numerical oracle for the Pallas flash-attention kernel.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
 from typing import Optional

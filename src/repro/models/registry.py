@@ -5,8 +5,6 @@ input of a dry-run cell — weak-type-correct, shardable, no device allocation.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -4,7 +4,6 @@ from scratch per assignment scope)."""
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, NamedTuple, Optional
 
 import jax

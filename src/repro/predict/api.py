@@ -38,7 +38,7 @@ class CommCall:
 CallSeq = Iterable
 
 
-def flatten_calls(calls: CallSeq, weight: float = 1.0, _out=None) -> list:
+def flatten_calls(calls: CallSeq, weight: float = 1.0, _out: Optional[list] = None) -> list:
     """Flatten a (possibly nested) call sequence into ``(call, weight)``
     pairs, folding group repetitions and per-call counts into the weight."""
     out = [] if _out is None else _out
@@ -56,7 +56,7 @@ class UntrainedFamilyError(RuntimeError):
     model for and the fallback policy is ``"error"`` (the default — silent
     oracle substitution hid real coverage gaps, see ISSUE 2)."""
 
-    def __init__(self, backend: str, kind: str, supported):
+    def __init__(self, backend: str, kind: str, supported: Iterable[str]) -> None:
         self.backend = backend
         self.kind = kind
         self.supported = sorted(supported)

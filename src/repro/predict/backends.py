@@ -17,15 +17,19 @@ from __future__ import annotations
 
 import glob
 import os
+from typing import TYPE_CHECKING, Any, Callable
 
 import numpy as np
 
 from repro.core import hwsim
 from repro.core.dataset import KernelDataset
 from repro.core.hardware import TPUSpec
-from repro.predict.api import Estimate, KernelCall, UntrainedFamilyError
+from repro.predict.api import CallSeq, Estimate, KernelCall, UntrainedFamilyError
 from repro.predict.batching import FeatureCache, group_calls
 from repro.predict.comm import CommRegressor
+
+if TYPE_CHECKING:
+    from repro.core.estimator import PipeWeave
 
 
 class BasePredictor:
@@ -41,12 +45,12 @@ class BasePredictor:
 
     def __init__(
         self,
-        hw: TPUSpec,
+        hw: TPUSpec | None,
         *,
         comm: CommRegressor | None = None,
         fallback: str = "error",
         cache: FeatureCache | None = None,
-    ):
+    ) -> None:
         if fallback not in ("error", "oracle", "roofline"):
             raise ValueError(f"fallback must be error|oracle|roofline, got {fallback!r}")
         self.hw = hw
@@ -97,7 +101,7 @@ class BasePredictor:
             return self._oracle_latencies(kind, workloads)
         return self._theoretical_latencies(kind, workloads)
 
-    def predict(self, calls) -> Estimate:
+    def predict(self, calls: CallSeq) -> Estimate:
         return self.predict_grouped(*group_calls(calls))
 
     def predict_grouped(self, families: dict, comms: dict) -> Estimate:
@@ -151,7 +155,7 @@ class BasePredictor:
     def comm_time(self, op: str, nbytes: float, n_units: int) -> float:
         return self._comm_latency(op, nbytes, n_units)
 
-    def as_times(self):
+    def as_times(self) -> tuple:
         """Legacy ``(kernel_time, comm_time)`` lambda pair (the old
         ``oracle_times``/``predictor_times`` plumbing)."""
         return (
@@ -166,7 +170,9 @@ class SynPerfPredictor(BasePredictor):
 
     name = "synperf"
 
-    def __init__(self, hw: TPUSpec, estimator=None, **kw):
+    def __init__(
+        self, hw: TPUSpec, estimator: "PipeWeave | str | None" = None, **kw: Any
+    ) -> None:
         super().__init__(hw, **kw)
         from repro.core.estimator import PipeWeave
 
@@ -214,7 +220,9 @@ class BaselinePredictor(BasePredictor):
 
     name = "baseline"
 
-    def __init__(self, hw: TPUSpec, models: dict | None = None, baseline: str = "", **kw):
+    def __init__(
+        self, hw: TPUSpec, models: dict | None = None, baseline: str = "", **kw: Any
+    ) -> None:
         super().__init__(hw, **kw)
         if not models:
             raise TypeError(
@@ -253,7 +261,7 @@ class CallableTimesPredictor(BasePredictor):
     name = "callable"
     compute_theoretical = False
 
-    def __init__(self, kernel_time, comm_time):
+    def __init__(self, kernel_time: Callable, comm_time: Callable) -> None:
         super().__init__(hw=None)
         self._kernel_time = kernel_time
         self._comm_time = comm_time
@@ -270,8 +278,8 @@ class CallableTimesPredictor(BasePredictor):
 # ----------------------------------------------------------------------
 
 
-def _baseline_factory(name: str):
-    def make(hw: TPUSpec, **kw):
+def _baseline_factory(name: str) -> Callable[..., "BaselinePredictor"]:
+    def make(hw: TPUSpec, **kw: Any) -> BaselinePredictor:
         return BaselinePredictor(hw, baseline=name, **kw)
 
     return make
@@ -287,7 +295,7 @@ PREDICTORS = {
 }
 
 
-def get_predictor(name: str, hw: TPUSpec, **kwargs) -> BasePredictor:
+def get_predictor(name: str, hw: TPUSpec, **kwargs: Any) -> BasePredictor:
     """One constructor for every backend.
 
     Common kwargs: ``comm`` (a fitted CommRegressor; auto-fitted on ``hw``
@@ -305,7 +313,7 @@ def get_predictor(name: str, hw: TPUSpec, **kwargs) -> BasePredictor:
     return factory(hw, **kwargs)
 
 
-def _load_cached_pipeweave():
+def _load_cached_pipeweave() -> "PipeWeave":
     """Default estimator for ``get_predictor("synperf", hw)`` with no
     explicit ``estimator=``: the newest PipeWeave pickle in the benchmark
     cache (written by ``benchmarks.common.get_pipeweave``)."""

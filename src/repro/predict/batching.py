@@ -26,10 +26,10 @@ import dataclasses
 import numpy as np
 
 from repro.core.decomposer import SCHED_POLICY, decompose
-from repro.core.features import analyze_summary, demand_summary
+from repro.core.features import FeatureSet, analyze_summary, demand_summary
 from repro.core.hardware import TPUSpec
 from repro.core.scheduler import schedule
-from repro.predict.api import CommCall, KernelCall, flatten_calls
+from repro.predict.api import CallSeq, CommCall, KernelCall, flatten_calls
 
 
 def canonical_x(X: dict) -> tuple:
@@ -84,7 +84,7 @@ class FeatureCache:
     Bounded: on overflow the caches reset rather than evicting — repeated
     sweeps re-warm in one pass."""
 
-    def __init__(self, maxsize: int = 100_000):
+    def __init__(self, maxsize: int = 100_000) -> None:
         self.maxsize = maxsize
         self._dec: dict = {}
         self._sched: dict = {}
@@ -98,11 +98,11 @@ class FeatureCache:
         self.task_hits = 0
         self.task_misses = 0
 
-    def _bound(self, d: dict):
+    def _bound(self, d: dict) -> None:
         if len(d) >= self.maxsize:
             d.clear()
 
-    def tasks(self, kind: str, X: dict, hw: TPUSpec):
+    def tasks(self, kind: str, X: dict, hw: TPUSpec) -> tuple:
         """(tasks, chip_of) for one workload, shared across hw with equal
         :func:`decompose_sig` / schedule inputs."""
         cx = canonical_x(X)
@@ -124,7 +124,7 @@ class FeatureCache:
             self._sched[skey] = chip_of
         return t, chip_of
 
-    def summary(self, kind: str, X: dict, hw: TPUSpec):
+    def summary(self, kind: str, X: dict, hw: TPUSpec) -> tuple:
         """Hw-independent demand summary, shared across hw with equal
         :func:`task_sig`."""
         key = (kind, task_sig(kind, hw), canonical_x(X))
@@ -139,7 +139,7 @@ class FeatureCache:
             self.task_hits += 1
         return summ
 
-    def featureset(self, kind: str, X: dict, hw: TPUSpec):
+    def featureset(self, kind: str, X: dict, hw: TPUSpec) -> "FeatureSet":
         key = (kind, hw.name, canonical_x(X))
         fs = self._fs.get(key)
         if fs is None:
@@ -177,7 +177,7 @@ class FamilyGroup:
         return np.asarray(self.weights, dtype=np.float64)
 
 
-def group_calls(calls) -> tuple[dict, dict]:
+def group_calls(calls: CallSeq) -> tuple[dict, dict]:
     """Flatten ``calls`` and group: kernel calls into per-family
     ``FamilyGroup``s deduplicated by canonical workload, comm calls into
     ``{(op, nbytes, n_units): weight}``."""

@@ -31,7 +31,7 @@ class CommRegressor:
     #: generator emits — see ``core.e2e.layer_calls``/``request_calls``)
     OPS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all", "p2p")
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.theta: dict = {}
 
     _NS = (2, 4, 8, 16)

@@ -36,7 +36,7 @@ fleet-wide routing pass.
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Any, Optional, Union
 
 from repro.core.hardware import TPUSpec
 from repro.predict.api import Estimate
@@ -47,7 +47,7 @@ class UnpricedHardwareError(ValueError):
     ``usd_per_chip_hour``. ``FleetRouter`` catches this and skips the
     entry with a warning instead of aborting the sweep."""
 
-    def __init__(self, hw_name: str, objective: str):
+    def __init__(self, hw_name: str, objective: str) -> None:
         self.hw_name = hw_name
         self.objective = objective
         super().__init__(
@@ -89,7 +89,7 @@ class LatencyObjective(Objective):
 
     name = "latency"
 
-    def score(self, hw, est, *, n_tokens=None) -> float:
+    def score(self, hw: TPUSpec, est: Estimate, *, n_tokens: Optional[float] = None) -> float:
         return est.total_s
 
 
@@ -98,7 +98,7 @@ class CostObjective(Objective):
 
     name = "cost"
 
-    def score(self, hw, est, *, n_tokens=None) -> float:
+    def score(self, hw: TPUSpec, est: Estimate, *, n_tokens: Optional[float] = None) -> float:
         return trace_cost_usd(hw, est, self.name)
 
 
@@ -107,7 +107,7 @@ class CostPerTokenObjective(Objective):
 
     name = "cost_per_token"
 
-    def score(self, hw, est, *, n_tokens=None) -> float:
+    def score(self, hw: TPUSpec, est: Estimate, *, n_tokens: Optional[float] = None) -> float:
         if not n_tokens:
             raise ValueError(
                 "objective 'cost_per_token' needs n_tokens > 0 (generated "
@@ -126,15 +126,15 @@ class SLOCheapestObjective(Objective):
 
     name = "slo_cheapest"
 
-    def __init__(self, slo_s: float):
+    def __init__(self, slo_s: float) -> None:
         if slo_s <= 0:
             raise ValueError(f"slo_s must be > 0, got {slo_s}")
         self.slo_s = slo_s
 
-    def score(self, hw, est, *, n_tokens=None) -> float:
+    def score(self, hw: TPUSpec, est: Estimate, *, n_tokens: Optional[float] = None) -> float:
         return trace_cost_usd(hw, est, self.name)
 
-    def feasible(self, hw, est) -> bool:
+    def feasible(self, hw: TPUSpec, est: Estimate) -> bool:
         return est.total_s <= self.slo_s
 
     def describe(self) -> str:
@@ -149,7 +149,7 @@ OBJECTIVES = {
 }
 
 
-def get_objective(spec: Union[str, Objective], **kwargs) -> Objective:
+def get_objective(spec: Union[str, Objective], **kwargs: Any) -> Objective:
     """Resolve an objective: an ``Objective`` instance passes through,
     a name constructs from :data:`OBJECTIVES` (``slo_cheapest`` requires
     ``slo_s=``)."""

@@ -26,16 +26,16 @@ predict (vs ~6x for independent passes).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional
+from typing import Any, ItemsView, Iterable, Iterator, Optional
 
 import numpy as np
 
 from repro.core.hardware import REGISTRY, TPUSpec, get_hw
-from repro.predict.api import CommCall, Estimate, KernelCall
+from repro.predict.api import CallSeq, CommCall, Estimate, KernelCall
 from repro.predict.batching import FeatureCache, group_calls
 
 
-def _resolve_hws(hws) -> list[TPUSpec]:
+def _resolve_hws(hws: Optional[Iterable]) -> list[TPUSpec]:
     if hws is None:
         return list(REGISTRY.values())
     out = []
@@ -49,7 +49,9 @@ def _resolve_hws(hws) -> list[TPUSpec]:
     return out
 
 
-def check_prebuilt_exclusive(name: str, prebuilt, hws, backend: str, backend_kw) -> None:
+def check_prebuilt_exclusive(
+    name: str, prebuilt: object, hws: Optional[Iterable], backend: str, backend_kw: dict
+) -> None:
     """Shared guard for the ``sweep=``/``router=`` convenience kwargs:
     a prebuilt object already carries its hardware list and backends, so
     combining it with construction kwargs is ambiguous and refused."""
@@ -80,13 +82,13 @@ class SweepResult:
     def __getitem__(self, hw_name: str) -> Estimate:
         return self.estimates[hw_name]
 
-    def __iter__(self):
+    def __iter__(self) -> Iterator:
         return iter(self.estimates)
 
-    def __len__(self):
+    def __len__(self) -> int:
         return len(self.estimates)
 
-    def items(self):
+    def items(self) -> ItemsView:
         return self.estimates.items()
 
     def totals(self) -> dict:
@@ -205,8 +207,8 @@ class SweepPredictor:
         *,
         cache: Optional[FeatureCache] = None,
         predictors: Optional[dict] = None,
-        **backend_kw,
-    ):
+        **backend_kw: Any,
+    ) -> None:
         from repro.predict.backends import get_predictor
 
         self.cache = cache if cache is not None else FeatureCache()
@@ -236,7 +238,7 @@ class SweepPredictor:
     def hw_names(self) -> list:
         return [hw.name for hw in self.hws]
 
-    def predict(self, calls) -> SweepResult:
+    def predict(self, calls: CallSeq) -> SweepResult:
         """Group once, estimate per hardware."""
         families, comms = group_calls(calls)
         return SweepResult(
@@ -246,7 +248,7 @@ class SweepPredictor:
             }
         )
 
-    def predict_steps(self, calls) -> dict:
+    def predict_steps(self, calls: CallSeq) -> dict:
         """Per-step estimates across the sweep: ``{hw name: [(label,
         Estimate), ...]}`` with one entry per *top-level* group of
         ``calls`` (a ``TraceRecorder`` trace has one group per executed
@@ -281,7 +283,7 @@ class SweepPredictor:
                 out[hw.name].append((label, est))
         return out
 
-    def compare(self, calls, *, reference: str = "oracle") -> SweepComparison:
+    def compare(self, calls: CallSeq, *, reference: str = "oracle") -> SweepComparison:
         """Measured (``reference`` backend, default the hwsim oracle) vs
         predicted, per hardware and per kernel family, over one grouping
         pass. This is the paper's seen/unseen evaluation protocol."""

@@ -14,7 +14,6 @@ from repro.roofline.analysis import (
     ICI_BW,
     HBM_BW,
     PEAK_FLOPS,
-    RooflineRow,
     load_rows,
     markdown_table,
     pick_hillclimb_cells,

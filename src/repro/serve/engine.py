@@ -344,7 +344,8 @@ class ContinuousBatchingEngine(_EngineBase):
     def __init__(self, cfg: ArchConfig, *, slots: int = 4, max_len: int = 128,
                  params=None, seed: int = 0, recorder=None,
                  admission: str = "fixed", predictor=None,
-                 decode_slo_s: Optional[float] = None, mesh=None):
+                 decode_slo_s: Optional[float] = None, mesh=None,
+                 audit=None):
         assert cfg.family not in ("ssm", "hybrid", "audio", "vlm"), (
             "reference continuous-batching engine supports KV-cache LMs"
         )
@@ -356,6 +357,22 @@ class ContinuousBatchingEngine(_EngineBase):
                 "backend for the target hardware) and decode_slo_s= (the "
                 "per-tick decode latency SLO in predicted seconds)"
             )
+        if audit and predictor is not None:
+            # audit=True: pre-flight coverage lint — a predictor that cannot
+            # price the decode workload (stale CommRegressor, untrained
+            # family) fails construction instead of the first admission tick.
+            # A callable substitutes a custom lint:
+            # audit(predictor, hw_name) -> list[Diagnostic].
+            from repro.analysis import AuditError, audit_predictor
+
+            found = (
+                audit_predictor(predictor)
+                if audit is True
+                else audit(predictor, getattr(getattr(predictor, "hw", None), "name", ""))
+            )
+            errors = [d for d in found if d.severity == "error"]
+            if errors:
+                raise AuditError(errors)
         super().__init__(cfg, params=params, seed=seed, recorder=recorder, mesh=mesh)
         self.max_len = max_len
         self.admission = admission

@@ -146,7 +146,16 @@ class FleetRouter:
     ``get_predictor`` per hardware, or pass a prebuilt ``sweep=`` to share
     its warmed ``FeatureCache`` across many routing calls. ``objective``
     is the default criterion (name or ``Objective``); every route call may
-    override it."""
+    override it.
+
+    ``audit=True`` runs the predictor-coverage lint
+    (``repro.analysis.audit_predictor``) over every fleet backend at
+    construction and raises :class:`~repro.analysis.AuditError` listing the
+    diagnostics — a stale ``CommRegressor`` or an untrained kernel family
+    fails *here* instead of surfacing as one skip warning per hardware in
+    the middle of a fleet sweep. Pass a callable
+    ``audit(predictor, hw_name) -> list[Diagnostic]`` to substitute a
+    custom pre-flight lint."""
 
     def __init__(
         self,
@@ -155,11 +164,27 @@ class FleetRouter:
         *,
         objective="latency",
         sweep: Optional[SweepPredictor] = None,
+        audit=None,
         **backend_kw,
     ):
         check_prebuilt_exclusive("sweep", sweep, hws, backend, backend_kw)
         self.sweep = sweep if sweep is not None else SweepPredictor(hws, backend, **backend_kw)
         self.objective = get_objective(objective)
+        if audit:
+            # deferred import: serve must stay importable without analysis
+            from repro.analysis import AuditError, audit_predictor
+
+            hook = audit_predictor if audit is True else audit
+            found = []
+            for name, predictor in self.sweep.predictors.items():
+                found += (
+                    hook(predictor, hw_name=name)
+                    if hook is audit_predictor
+                    else hook(predictor, name)
+                )
+            errors = [d for d in found if d.severity == "error"]
+            if errors:
+                raise AuditError(errors)
 
     @property
     def hw_names(self) -> list:

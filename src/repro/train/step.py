@@ -5,15 +5,11 @@ latency hiding)."""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.dist.collectives import ef_compress_grads
-from repro.dist.sharding import constrain
 from repro.models.registry import ModelApi
 from repro.optim.adamw import AdamW, AdamWState
 

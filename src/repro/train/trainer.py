@@ -15,20 +15,17 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import os
 import signal
 import statistics
 import time
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.registry import build_model
-from repro.optim.adamw import AdamW
 from repro.train.step import TrainConfig, init_train_state, make_optimizer, make_train_step
 
 log = logging.getLogger("repro.train")

@@ -1,0 +1,280 @@
+"""Static-auditor tests: the current repo audits clean, and each check
+family provably fires on a seeded re-introduction of its bug class."""
+import copy
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (
+    AuditError,
+    AuditShape,
+    Diagnostic,
+    audit_comm_regressor,
+    audit_predictor,
+    check_coverage,
+    check_head_accounting,
+    check_kernel_resources,
+    check_sharding,
+    check_task_conservation,
+    json_report,
+    render_report,
+    run_audit,
+    sort_diagnostics,
+    worst_severity,
+)
+from repro.configs import get_arch, list_archs
+from repro.core.e2e import model_calls
+from repro.core.hardware import get_hw
+from repro.predict.api import CommCall, KernelCall
+from repro.predict.backends import get_predictor
+from repro.predict.comm import CommRegressor
+
+MOE = "dbrx-132b"  # smallest MoE arch in the registry
+DENSE = "qwen3-0.6b"
+
+
+def _run_cli(*argv):
+    """Run ``python -m repro.analysis`` from the repo root (src/ layout)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True,
+        text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+
+
+# ---------------------------------------------------------------------------
+# diagnostics model
+
+
+def test_diagnostic_severity_validated():
+    with pytest.raises(ValueError):
+        Diagnostic(code="SP999", severity="fatal", check="x", message="m")
+
+
+def test_report_ordering_and_tally():
+    diags = [
+        Diagnostic(code="SP105", severity="info", check="c", message="i"),
+        Diagnostic(code="SP201", severity="error", check="k", message="e"),
+        Diagnostic(code="SP304", severity="warning", check="s", message="w"),
+    ]
+    ordered = sort_diagnostics(diags)
+    assert [d.severity for d in ordered] == ["error", "warning", "info"]
+    assert worst_severity(diags) == "error"
+    assert worst_severity([]) is None
+    report = render_report(diags)
+    assert "1 error, 1 warning, 1 info" in report
+    parsed = json.loads(json_report(diags))
+    assert [p["code"] for p in parsed] == ["SP201", "SP304", "SP105"]
+
+
+# ---------------------------------------------------------------------------
+# the current repo audits clean
+
+
+def test_full_registry_audit_is_clean():
+    diags = run_audit()
+    errors = [d for d in diags if d.severity in ("error", "warning")]
+    assert not errors, render_report(errors)
+    # conservation reports the artifact-gated skip for every arch
+    assert {d.arch for d in diags if d.code == "SP105"} == set(list_archs())
+
+
+def test_cli_strict_exits_zero():
+    proc = _run_cli("--arch", DENSE, "--strict", "--json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    parsed = json.loads(proc.stdout)
+    assert all(d["severity"] == "info" for d in parsed)
+
+
+def test_cli_rejects_unknown_arch():
+    proc = _run_cli("--arch", "nope")
+    assert proc.returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# seeded bugs: each family fires
+
+
+def _mutate_head_gemm(calls, **overrides):
+    calls = copy.deepcopy(calls)
+    for item in calls:
+        if not isinstance(item, (KernelCall, CommCall)) and item[0] == "head":
+            for c in item[2]:
+                if isinstance(c, KernelCall) and c.kind == "gemm":
+                    c.X.update(overrides)
+    return calls
+
+
+def test_seeded_lm_head_undercount_fires_sp103():
+    """Re-introduce the PR 2 bug: the head GEMM prices B rows during a
+    B*qlen prefill."""
+    cfg = get_arch(DENSE)
+    B, qlen, tp = 2, 128, 4
+    calls = model_calls(cfg, B, qlen, qlen, tp)
+    assert check_head_accounting(cfg, B=B, qlen=qlen, tp=tp, calls=calls) == []
+    bugged = _mutate_head_gemm(calls, M=B)  # last-token-only accounting
+    diags = check_head_accounting(cfg, B=B, qlen=qlen, tp=tp, calls=bugged)
+    assert [d.code for d in diags] == ["SP103"]
+    assert diags[0].data["expected"]["M"] == B * qlen
+
+
+def test_seeded_head_gather_drift_fires_sp104():
+    cfg = get_arch(DENSE)
+    B, qlen, tp = 2, 128, 4
+    calls = copy.deepcopy(model_calls(cfg, B, qlen, qlen, tp))
+    for item in calls:
+        if not isinstance(item, (KernelCall, CommCall)) and item[0] == "head":
+            for c in item[2]:
+                if isinstance(c, CommCall) and c.op == "all_gather":
+                    c.nbytes /= 2  # bf16-sized gather of an f32 logit shard
+    diags = check_head_accounting(cfg, B=B, qlen=qlen, tp=tp, calls=calls)
+    assert [d.code for d in diags] == ["SP104"]
+
+
+def test_seeded_decomposer_drift_fires_sp102(monkeypatch):
+    """Emulate a decomposer regression: tasks account for half the GEMM
+    MXU demand. The conservation sum catches it on every gemm call."""
+    import repro.analysis.conservation as cons
+
+    cfg = get_arch(DENSE)
+    real = cons.decompose
+
+    def lossy(kind, X, hw):
+        t = real(kind, X, hw)
+        if kind == "gemm":
+            t.mxu = t.mxu * 0.5
+        return t
+
+    assert check_task_conservation(cfg, B=2, lin=512, lout=64, tp=4) == []
+    monkeypatch.setattr(cons, "decompose", lossy)
+    diags = check_task_conservation(cfg, B=2, lin=512, lout=64, tp=4)
+    assert diags and all(d.code == "SP102" for d in diags)
+    assert all(d.data["kind"] == "gemm" for d in diags)
+
+
+def test_seeded_vmem_overflow_fires_sp201():
+    """An autotuning candidate block that cannot fit: fused_moe with
+    block_f=4096 double-buffers ~hundreds of MiB."""
+    cfg = get_arch(MOE)
+    clean = check_kernel_resources(cfg)
+    assert [d for d in clean if d.severity == "error"] == []
+    diags = check_kernel_resources(cfg, block_overrides={"fused_moe": {"block_f": 4096}})
+    codes = {d.code for d in diags}
+    assert "SP201" in codes or "SP202" in codes
+    overflows = [d for d in diags if d.code == "SP201"]
+    if overflows:
+        assert all(d.data["footprint_bytes"] > d.data["vmem_bytes"] for d in overflows)
+
+
+def test_seeded_bad_tiling_fires_sp202():
+    cfg = get_arch(DENSE)
+    diags = check_kernel_resources(
+        cfg,
+        workloads=[("flash_attention", {"B": 1, "S": 192, "Skv": 192, "Hq": 4, "Hkv": 4, "D": 64})],
+    )
+    assert [d.code for d in diags] == ["SP202"]  # 192 % min(128,192) != 0
+
+
+def test_seeded_unaudited_leaf_fires_sp301():
+    """A new parameter leaf that rides the generic fallback instead of an
+    audited sharding rule."""
+    import jax
+
+    cfg = get_arch(DENSE)
+    from repro.models.registry import build_model
+
+    api = build_model(cfg)
+    shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    assert [d for d in check_sharding(cfg, param_shapes=shapes) if d.severity == "error"] == []
+    bugged = dict(shapes)
+    bugged["mystery_adapter"] = jax.ShapeDtypeStruct((4096, 4096), "float32")
+    diags = check_sharding(cfg, param_shapes=bugged)
+    assert "SP301" in {d.code for d in diags}
+    sp301 = [d for d in diags if d.code == "SP301"]
+    assert any(d.data["leaf"] == "mystery_adapter" for d in sp301)
+
+
+def test_coverage_static_clean_and_seeded_sp401_sp402():
+    cfg = get_arch(MOE)
+    assert check_coverage(cfg) == []
+    bugged = [
+        KernelCall("conv3d", {"M": 1}),
+        CommCall("all_to_one", 1e6, 8),
+    ]
+    diags = check_coverage(cfg, calls=bugged)
+    assert {d.code for d in diags} == {"SP401", "SP402"}
+
+
+# ---------------------------------------------------------------------------
+# instance audits + the serve pre-flight hooks (satellite e)
+
+
+def _stale_regressor(hw):
+    """A regressor fitted before 'all_to_all' joined CommRegressor.OPS."""
+    c = CommRegressor().fit(hw)
+    for k in [k for k in c.theta if k[0] == "all_to_all"]:
+        del c.theta[k]
+    return c
+
+
+def test_stale_comm_regressor_fires_sp401():
+    hw = get_hw("tpu-v5e")
+    assert audit_comm_regressor(None) == []
+    assert audit_comm_regressor(CommRegressor().fit(hw)) == []
+    diags = audit_comm_regressor(_stale_regressor(hw), hw_name=hw.name)
+    assert [d.code for d in diags] == ["SP401"]
+    assert diags[0].data["missing_ops"] == ["all_to_all"]
+
+
+def test_audit_predictor_clean():
+    hw = get_hw("tpu-v5e")
+    assert audit_predictor(get_predictor("roofline", hw)) == []
+
+
+def test_fleet_router_audit_catches_stale_regressor_at_init():
+    from repro.serve.placement import FleetRouter
+
+    hw = get_hw("tpu-v5e")
+    stale = _stale_regressor(hw)
+    # without audit: constructs fine (the stale regressor would surface
+    # later, as a mid-sweep skip warning)
+    FleetRouter(["tpu-v5e"], "roofline", comm=stale)
+    with pytest.raises(AuditError) as ei:
+        FleetRouter(["tpu-v5e"], "roofline", audit=True, comm=stale)
+    assert [d.code for d in ei.value.diagnostics] == ["SP401"]
+    assert "all_to_all" in str(ei.value)
+    # a fitted fleet passes the same audit
+    FleetRouter(["tpu-v5e"], "roofline", audit=True)
+
+
+def test_engine_predicted_admission_audit():
+    from repro.serve.engine import ContinuousBatchingEngine
+
+    hw = get_hw("tpu-v5e")
+    cfg = get_arch(DENSE)
+    bad = get_predictor("roofline", hw, comm=_stale_regressor(hw))
+    with pytest.raises(AuditError):
+        ContinuousBatchingEngine(
+            cfg, admission="predicted", predictor=bad, decode_slo_s=0.5, audit=True
+        )
+    good = get_predictor("roofline", hw)
+    eng = ContinuousBatchingEngine(
+        cfg, admission="predicted", predictor=good, decode_slo_s=0.5, audit=True
+    )
+    assert eng.admission == "predicted"
+
+
+# ---------------------------------------------------------------------------
+# audit shape knobs
+
+
+def test_audit_shape_is_divisibility_safe():
+    shape = AuditShape()
+    assert shape.lin % 128 == 0 and shape.tp == 16

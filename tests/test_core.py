@@ -1,7 +1,6 @@
 """PipeWeave core unit + property tests: decomposer invariants, scheduler
 partition laws, feature monotonicity, oracle sanity, estimator round-trip."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import hwsim
@@ -12,9 +11,8 @@ from repro.core.decomposer import (
     gemm_tile_heuristic,
     routing_counts,
 )
-from repro.core.features import PIPES, analyze
 from repro.core.hardware import REGISTRY, get_hw, seen_hw, unseen_hw
-from repro.core.scheduler import schedule, schedule_static, schedule_workqueue
+from repro.core.scheduler import schedule_static, schedule_workqueue
 
 HW = get_hw("tpu-v5e")
 

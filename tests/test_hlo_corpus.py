@@ -1,0 +1,169 @@
+"""Regression corpus for the optimized-HLO cost walker: hand-written HLO
+text in the shapes XLA actually emits (layout-brace operands, batch dims,
+mixed dtypes, known-trip-count whiles, collectives), with the parsed
+M/N/K, FLOPs and bytes asserted against hand computation."""
+
+from repro.roofline.hlo_cost import (
+    _TUPLE_SPLIT,
+    _shape_dims,
+    analyze_hlo,
+    computation_traffic,
+    parse_module,
+)
+
+SIMPLE_DOT = """\
+HloModule simple_dot
+
+ENTRY %main (p0: f32[256,512], p1: f32[512,128]) -> f32[256,128] {
+  %p0 = f32[256,512]{1,0} parameter(0)
+  %p1 = f32[512,128]{1,0} parameter(1)
+  ROOT %dot.1 = f32[256,128]{1,0} dot(f32[256,512]{1,0} %p0, f32[512,128]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+BATCH_DOT_LAYOUT = """\
+HloModule batch_dot
+
+ENTRY %main (p0: bf16[2,512,64], p1: bf16[2,64,128]) -> bf16[2,512,128] {
+  %p0 = bf16[2,512,64]{2,1,0} parameter(0)
+  %p1 = bf16[2,64,128]{2,1,0} parameter(1)
+  ROOT %dot.2 = bf16[2,512,128]{2,1,0} dot(bf16[2,512,64]{2,1,0} %p0, bf16[2,64,128]{2,1,0} %p1), lhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_batch_dims={0}, rhs_contracting_dims={1}
+}
+"""
+
+INT8_DOT = """\
+HloModule int8_dot
+
+ENTRY %main (p0: s8[256,512], p1: s8[512,128]) -> s32[256,128] {
+  %p0 = s8[256,512]{1,0} parameter(0)
+  %p1 = s8[512,128]{1,0} parameter(1)
+  ROOT %dot.q = s32[256,128]{1,0} dot(s8[256,512]{1,0} %p0, s8[512,128]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+SCANNED_LAYERS = """\
+HloModule scanned
+
+%cond (cparam: (s32[], f32[128,128])) -> pred[] {
+  %gte.c = s32[] get-tuple-element((s32[], f32[128,128]) %cparam), index=0
+  %cn = s32[] constant(24)
+  ROOT %lt = pred[] compare(s32[] %gte.c, s32[] %cn), direction=LT
+}
+
+%body (wparam: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %gte.0 = s32[] get-tuple-element((s32[], f32[128,128]) %wparam), index=0
+  %c1 = s32[] constant(1)
+  %add.0 = s32[] add(s32[] %gte.0, s32[] %c1)
+  %gte.1 = f32[128,128]{1,0} get-tuple-element((s32[], f32[128,128]) %wparam), index=1
+  %dot.b = f32[128,128]{1,0} dot(f32[128,128]{1,0} %gte.1, f32[128,128]{1,0} %gte.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %tuple.b = (s32[], f32[128,128]) tuple(s32[] %add.0, f32[128,128]{1,0} %dot.b)
+}
+
+ENTRY %main (p0: f32[128,128]) -> (s32[], f32[128,128]) {
+  %p0 = f32[128,128]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %tuple.0 = (s32[], f32[128,128]) tuple(s32[] %c0, f32[128,128]{1,0} %p0)
+  ROOT %while.1 = (s32[], f32[128,128]) while((s32[], f32[128,128]) %tuple.0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"24"}}
+}
+"""
+
+COLLECTIVES = """\
+HloModule collectives
+
+ENTRY %main (p0: f32[1,128], p1: bf16[4096]) -> f32[4,128] {
+  %p0 = f32[1,128]{1,0} parameter(0)
+  %p1 = bf16[4096]{0} parameter(1)
+  %ar = bf16[4096]{0} all-reduce(bf16[4096]{0} %p1), replica_groups={{0,1,2,3}}, to_apply=%add_comp
+  ROOT %ag = f32[4,128]{1,0} all-gather(f32[1,128]{1,0} %p0), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+
+
+def test_simple_dot_mnk_and_flops():
+    comps = parse_module(SIMPLE_DOT)
+    entry = comps["__entry__"]
+    dot = [i for i in entry.instrs if i.op == "dot"][0]
+    assert len(dot.operands) == 2
+    assert _shape_dims(dot.type) == [256, 128]  # M, N
+    s = analyze_hlo(SIMPLE_DOT)
+    assert s.dot_flops == 2 * 256 * 128 * 512
+    # boundary traffic: both operands read + output written, all f32
+    assert s.hbm_bytes == (256 * 512 + 512 * 128 + 256 * 128) * 4
+
+
+def test_batch_dot_layout_braces():
+    """Layout braces `{2,1,0}` carry commas that must not split operands,
+    and the batch dim must stay out of K."""
+    comps = parse_module(BATCH_DOT_LAYOUT)
+    dot = [i for i in comps["__entry__"].instrs if i.op == "dot"][0]
+    assert len(dot.operands) == 2  # _TUPLE_SPLIT kept `{2,1,0}` intact
+    s = analyze_hlo(BATCH_DOT_LAYOUT)
+    # out numel = 2*512*128, contracting dim (lhs dim 2) = 64; batch dim
+    # multiplies through out numel, not K
+    assert s.dot_flops == 2 * (2 * 512 * 128) * 64
+    assert s.hbm_bytes == (2 * 512 * 64 + 2 * 64 * 128 + 2 * 512 * 128) * 2
+
+
+def test_mixed_dtype_dot_bytes():
+    s = analyze_hlo(INT8_DOT)
+    assert s.dot_flops == 2 * 256 * 128 * 512
+    # s8 operands, s32 out
+    assert s.hbm_bytes == 256 * 512 * 1 + 512 * 128 * 1 + 256 * 128 * 4
+
+
+def test_while_known_trip_count_scales_body():
+    s = analyze_hlo(SCANNED_LAYERS)
+    assert s.n_while == 1
+    # the body dot executes 24 times — the exact undercount the walker
+    # exists to fix (cost_analysis() would count it once)
+    assert s.dot_flops == 24 * 2 * 128 * 128 * 128
+
+
+def test_collective_bytes_per_kind():
+    s = analyze_hlo(COLLECTIVES)
+    assert s.collectives["all-gather"]["bytes"] == 1 * 128 * 4
+    assert s.collectives["all-gather"]["count"] == 1
+    assert s.collectives["all-reduce"]["bytes"] == 4096 * 2
+    assert s.collective_bytes == 128 * 4 + 4096 * 2
+
+
+def test_tuple_split_respects_brackets():
+    parts = _TUPLE_SPLIT.split(
+        "bf16[2,512,64]{2,1,0} %p0, bf16[2,64,128]{2,1,0} %p1, s32[] %i"
+    )
+    assert len(parts) == 3
+    assert parts[0].endswith("%p0") and parts[2] == "s32[] %i"
+
+
+def test_computation_traffic_fusion_grouping():
+    """A single-consumer elementwise producer fuses into its dot consumer:
+    the intermediate value never hits HBM."""
+    text = """\
+HloModule fused
+
+ENTRY %main (p0: f32[256,512], p1: f32[512,128]) -> f32[256,128] {
+  %p0 = f32[256,512]{1,0} parameter(0)
+  %p1 = f32[512,128]{1,0} parameter(1)
+  %neg = f32[256,512]{1,0} negate(f32[256,512]{1,0} %p0)
+  ROOT %dot.f = f32[256,128]{1,0} dot(f32[256,512]{1,0} %neg, f32[512,128]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    comps = parse_module(text)
+    traffic = computation_traffic(comps["__entry__"], comps)
+    # %neg merges into the dot group: p0 + p1 read, dot out written; the
+    # negated intermediate is on-chip
+    assert traffic == (256 * 512 + 512 * 128 + 256 * 128) * 4
+
+
+def test_unknown_dtype_shapes_are_skipped():
+    s = analyze_hlo(
+        """\
+HloModule opaque
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8]{0} parameter(0)
+  ROOT %cc = f32[8]{0} custom-call(f32[8]{0} %p0), custom_call_target="foo"
+}
+"""
+    )
+    assert s.dot_flops == 0

@@ -1,8 +1,6 @@
 """Validate the loop-aware HLO cost walker against known workloads."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax import lax
 
 from repro.roofline.hlo_cost import analyze_hlo
@@ -93,7 +91,7 @@ def test_no_unknown_heavy_ops_on_model_step():
     """The walker recognizes every op the real models emit (no silent
     undercount): compile a tiny model train step and check unknowns."""
     from repro.configs import get_arch
-    from repro.models.registry import build_model, materialize_batch
+    from repro.models.registry import build_model
 
     cfg = get_arch("qwen3-0.6b").smoke()
     api = build_model(cfg)

@@ -6,8 +6,6 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import ops as fa_ops
-from repro.kernels.flash_attention.kernel import flash_attention_pallas
-from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.fused_moe import ops as moe_ops
 from repro.kernels.fused_moe.ref import fused_moe_ref
 from repro.kernels.rmsnorm import ops as rms_ops

@@ -7,7 +7,6 @@ pure event-driven ring simulation, and the decomposer's EP payload against
 the dry-run's model-derived ledger, across the whole grid."""
 import warnings
 
-import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st

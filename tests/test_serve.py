@@ -1,6 +1,5 @@
 """Serving engine integration tests (reduced configs on CPU)."""
 import numpy as np
-import pytest
 
 from repro.configs import get_arch
 from repro.serve.engine import Request, ServeEngine

@@ -11,7 +11,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.dist.collectives import ef_compress_grads
-from repro.optim.adamw import AdamW, constant_lr, global_norm, warmup_cosine
+from repro.optim.adamw import AdamW, constant_lr, warmup_cosine
 from repro.train.step import TrainConfig
 from repro.train.trainer import Trainer, TrainerConfig
 

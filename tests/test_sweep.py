@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import get_arch
 from repro.core.dataset import build_dataset, featurize, sample_workload
-from repro.core.e2e import model_calls, request_calls, request_estimate, request_sweep
+from repro.core.e2e import model_calls, request_estimate, request_sweep
 from repro.core.estimator import train_pipeweave
 from repro.core.hardware import REGISTRY, get_hw
 from repro.predict import (

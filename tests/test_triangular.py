@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.models.layers import chunked_attention, triangular_attention
+from repro.models.layers import chunked_attention
 
 
 def _dense(q, k, v, pos, softcap=None, q_block=16):
