@@ -1,0 +1,5 @@
+"""Trajectory benchmarks (``python -m benchmarks.run`` / ``benchmarks.bench_*``).
+
+A regular package so mypy's ``packages = ["repro", "benchmarks"]`` discovery
+and ``python -m benchmarks.<module>`` resolve the same files.
+"""

@@ -1,16 +1,32 @@
 """Paper Table VIII + Fig 5: kernel-level prediction MAPE of PipeWeave vs the
-four baselines, split by seen/unseen hardware, per kernel family."""
+four baselines, split by seen/unseen hardware, per kernel family.
+
+Criteria (asserted in ``--smoke``): PipeWeave's average MAPE beats the best
+baseline on BOTH splits (error reduction > ``MIN_ERROR_REDUCTION``) and
+stays under ``MAX_SEEN_MAPE`` / ``MAX_UNSEEN_MAPE`` absolute — the paper's
+kernel-accuracy headline as a standing regression gate.
+
+Standalone: ``python -m benchmarks.bench_kernel_mape [--smoke] [--json PATH]``
+(non-zero exit when a smoke criterion fails — the CI gate).
+"""
 from __future__ import annotations
+
+import argparse
+import sys
 
 import numpy as np
 
-from benchmarks.common import Csv, get_all_datasets, get_baseline, get_pipeweave
+from benchmarks.common import Csv, get_all_datasets, get_baseline, get_pipeweave, write_bench_json
 from repro.core.dataset import SEEN, mape
 
 BASELINE_NAMES = ("roofline", "linear", "habitat", "neusight")
 
+MIN_ERROR_REDUCTION = 1.2  # x over the best baseline, both splits
+MAX_SEEN_MAPE = 25.0  # %; CI runs at 60 workloads / 60 epochs
+MAX_UNSEEN_MAPE = 45.0  # %
 
-def run(csv: Csv):
+
+def run(csv: Csv, smoke: bool = False) -> dict:
     datasets = get_all_datasets()
     pw = get_pipeweave()
 
@@ -29,14 +45,66 @@ def run(csv: Csv):
                 f"seen={table[(kind, name, 'seen')]:.1f}%|unseen={table[(kind, name, 'unseen')]:.1f}%",
             )
 
+    avg = {}
     for split in ("seen", "unseen"):
         for name in ("pipeweave", *BASELINE_NAMES):
-            avg = np.mean([table[(k, name, split)] for k in datasets])
-            csv.add(f"table8/avg_{split}/{name}", 0.0, f"{avg:.1f}%")
+            avg[(name, split)] = float(
+                np.mean([table[(k, name, split)] for k in datasets])
+            )
+            csv.add(f"table8/avg_{split}/{name}", 0.0, f"{avg[(name, split)]:.1f}%")
     # headline error-reduction factor vs best baseline (paper: 6.7x / 3.8x)
+    reduction = {}
     for split in ("seen", "unseen"):
-        ours = np.mean([table[(k, "pipeweave", split)] for k in datasets])
-        best_base = min(
-            np.mean([table[(k, b, split)] for k in datasets]) for b in BASELINE_NAMES
+        ours = avg[("pipeweave", split)]
+        best_base = min(avg[(b, split)] for b in BASELINE_NAMES)
+        reduction[split] = best_base / max(ours, 1e-9)
+        csv.add(f"table8/error_reduction_{split}", 0.0, f"{reduction[split]:.1f}x")
+
+    results = {
+        "mape_seen": avg[("pipeweave", "seen")],
+        "mape_unseen": avg[("pipeweave", "unseen")],
+        "best_baseline_seen": min(avg[(b, "seen")] for b in BASELINE_NAMES),
+        "best_baseline_unseen": min(avg[(b, "unseen")] for b in BASELINE_NAMES),
+        "error_reduction_seen": reduction["seen"],
+        "error_reduction_unseen": reduction["unseen"],
+    }
+    if smoke:
+        assert reduction["seen"] >= MIN_ERROR_REDUCTION, (
+            f"seen-hw error reduction {reduction['seen']:.2f}x < "
+            f"{MIN_ERROR_REDUCTION}x over the best baseline"
         )
-        csv.add(f"table8/error_reduction_{split}", 0.0, f"{best_base/max(ours,1e-9):.1f}x")
+        assert reduction["unseen"] >= MIN_ERROR_REDUCTION, (
+            f"unseen-hw error reduction {reduction['unseen']:.2f}x < "
+            f"{MIN_ERROR_REDUCTION}x over the best baseline"
+        )
+        assert results["mape_seen"] <= MAX_SEEN_MAPE, (
+            f"seen-hw MAPE {results['mape_seen']:.1f}% > {MAX_SEEN_MAPE}% cap"
+        )
+        assert results["mape_unseen"] <= MAX_UNSEEN_MAPE, (
+            f"unseen-hw MAPE {results['mape_unseen']:.1f}% > {MAX_UNSEEN_MAPE}% cap"
+        )
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert MAPE caps + error-reduction floors (CI gate)")
+    ap.add_argument("--json", help="write BENCH_kernel_mape.json-style artifact here")
+    args = ap.parse_args(argv)
+    csv = Csv()
+    print("name,value,derived")
+    try:
+        results = run(csv, smoke=args.smoke)
+        failed = False
+    except AssertionError as e:
+        print(f"# SMOKE FAILURE: {e}", file=sys.stderr)
+        results = {"error": str(e)}
+        failed = True
+    if args.json:
+        write_bench_json(args.json, csv, **results, passed=not failed)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

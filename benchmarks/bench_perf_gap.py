@@ -1,37 +1,131 @@
 """Paper §VII (Figs 8-9, Table X): P80 ceiling, Performance-Gap diagnosis and
-model-guided autotuning of the fused MoE kernel."""
+predictor-guided autotuning — both substrates of ``repro.tune``:
+
+  * real kernels — ``tune("fused_moe", ...)`` over the actual Pallas kernel
+    with timed interpret-mode execution. Criteria (asserted in ``--smoke``):
+    the selected config beats the default blocks by ``MIN_REAL_SPEEDUP`` in
+    wall-clock, every measured candidate passes the static SP2xx lint on
+    every registry device, and predicted-vs-measured rank correlation is at
+    least ``MIN_RANK_CORR`` (the paper's predictor-as-oracle claim);
+  * hwsim dataset — the §VII-C experiment: tune the ceiling-diagnosed
+    underperformers with synperf ranking + hwsim measurement. Criteria
+    (asserted in ``--smoke``): the diagnosed gap closes (mean gap after <
+    before), the geomean speedup is real (> 1), and the top-k *regret* —
+    measured-best over exhaustive hwsim best — stays under
+    ``MAX_SIM_REGRET``. Regret is the honest oracle-quality metric here:
+    the estimator is trained on default-block configs only, so its
+    within-workload block ordering (reported as
+    ``sim_rank_correlation_mean``, ungated) is weak even while its top-k
+    reliably contains a near-optimal config.
+
+Standalone: ``python -m benchmarks.bench_perf_gap [--smoke] [--json PATH]``
+(non-zero exit when a smoke criterion fails — the CI gate).
+"""
 from __future__ import annotations
+
+import argparse
+import sys
 
 import numpy as np
 
-from benchmarks.common import Csv, get_dataset
+from benchmarks.common import Csv, get_backend, write_bench_json
+from repro.core.dataset import SEEN
+from repro.core.hardware import REGISTRY
 from repro.core.quantile import perf_gap, train_ceiling
-from repro.core.tuner import geomean_speedup, pearson, tune_underperformers
+from repro.tune import (
+    geomean_speedup,
+    pearson,
+    tune,
+    tune_underperformers,
+    tune_workload,
+)
+
+MIN_REAL_SPEEDUP = 1.10  # measured locally ~3.5x; generous for noisy runners
+MIN_RANK_CORR = 0.5  # over the measured top-k (4 points)
+MAX_SIM_REGRET = 1.05  # mean top-k regret vs exhaustive best (measured ~1.02)
+REAL_TUNE_HW = "tpu-v4"
+REAL_TOP_K = 4
+REAL_REPEATS = 2
+SIM_TOP_K = 5
+EXHAUSTIVE_TOP_K = 10**9  # "measure every survivor" (hwsim is cheap)
 
 
-def run(csv: Csv):
+def _real_kernel_tuning(csv: Csv) -> dict:
+    """Tune the real fused-MoE Pallas kernel, timed execution."""
+    from repro.analysis.kernels import check_blocks
+
+    hw = REGISTRY[REAL_TUNE_HW]
+    predictor = get_backend("roofline", hw)
+    report = tune(
+        "fused_moe",
+        hw,
+        predictor=predictor,
+        predictor_name="roofline",
+        top_k=REAL_TOP_K,
+        repeats=REAL_REPEATS,
+    )
+    s = report.summary()
+    csv.add(
+        "tune/fused_moe_speedup",
+        report.t_default * 1e6,
+        f"{report.speedup:.2f}x ({report.default_blocks} -> {report.best.blocks}, "
+        f"{'interpret' if report.interpret else 'compiled'})",
+    )
+    csv.add(
+        "tune/fused_moe_rank_correlation",
+        0.0,
+        f"{report.rank_correlation:+.2f} over {len(report.measured)} measured",
+    )
+    csv.add(
+        "tune/fused_moe_candidates",
+        0.0,
+        f"{report.n_candidates} enumerated, {report.n_rejected} SP2xx-rejected, "
+        f"{len(report.survivors)} ranked",
+    )
+    # every launched candidate must be clean on EVERY registry device — the
+    # same lint `python -m repro.analysis` runs (SP201-SP203 geometry;
+    # SP204 is a config-vocabulary check with no block dependence)
+    dirty = [
+        c.blocks
+        for c in report.measured
+        if check_blocks("fused_moe", report.workload, c.blocks)
+    ]
+    s["launched_all_pass_sp2xx"] = not dirty
+    s["dirty_candidates"] = dirty
+    return s
+
+
+def _dataset_tuning(csv: Csv) -> dict:
+    """The paper's §VII-C experiment on the hwsim dataset."""
+    from benchmarks.common import get_dataset
+
     ds = get_dataset("fused_moe")
     ceiling = train_ceiling(ds, quantile=0.8)
     report = perf_gap(ceiling, ds, threshold=0.1)
 
-    grid, cdf = report.cdf()
-    # fraction of points with gap below 0.1 (paper: ~80%)
     below = float((report.gaps <= 0.1).mean())
     csv.add("fig8/frac_gap_below_0.1", 0.0, f"{below:.3f}")
     for hw, count in sorted(report.per_hw_counts.items(), key=lambda kv: -kv[1]):
         csv.add(f"fig8/underperforming/{hw}", 0.0,
                 f"{count} ({100*report.per_hw_frac[hw]:.1f}%)")
 
-    # --- Table X: tune underperformers, correlate counts with speedups.
-    # Paper protocol: §VII-C tunes on hardware from the TRAINING set only
-    # (A40/L20/A100/H800 are all seen GPUs); on unseen hw part of the
-    # diagnosed "gap" is ceiling-model extrapolation error, not kernel
-    # config badness, which dilutes the correlation — we report both.
-    from repro.core.dataset import SEEN
-
-    tuned = tune_underperformers(ds, report.underperforming, per_hw_limit=30)
+    # --- Table X: tune underperformers with synperf ranking + hwsim
+    # measurement (predicted != measured, so the rank correlation is a real
+    # claim), correlate per-hw counts with realized speedups.
+    # Paper protocol: §VII-C tunes on hardware from the TRAINING set only;
+    # on unseen hw part of the diagnosed "gap" is ceiling-model
+    # extrapolation error, not kernel config badness, which dilutes the
+    # correlation — we report both.
+    predictors = {name: get_backend("synperf", REGISTRY[name])
+                  for name in sorted(set(ds.hw_names))}
+    tuned = tune_underperformers(
+        ds, report.underperforming, per_hw_limit=30, predictors=predictors,
+        top_k=SIM_TOP_K,
+    )
     counts, speedups = [], []
     counts_seen, speedups_seen = [], []
+    rank_corrs = []
+    regrets = []
     for hw, results in sorted(tuned.items(), key=lambda kv: -len(kv[1])):
         if not results:
             continue
@@ -41,21 +135,45 @@ def run(csv: Csv):
         if hw in SEEN:
             counts_seen.append(report.per_hw_counts[hw])
             speedups_seen.append(g)
+        rank_corrs += [r.rank_correlation for r in results]
+        # regret: measured-best among the predictor's top-k over the
+        # exhaustive hwsim best (predictor=None measures every survivor)
+        for r in results:
+            oracle = tune_workload(r.workload, REGISTRY[hw],
+                                   predictor=None, top_k=EXHAUSTIVE_TOP_K)
+            regrets.append(r.t_best / oracle.t_best)
         csv.add(f"table10/{hw}", 0.0,
                 f"underperf={report.per_hw_counts[hw]}|geomean_speedup={g:.2f}x"
                 f"|{'seen' if hw in SEEN else 'unseen'}")
-    csv.add("table10/pearson_seen_hw_paper_protocol", 0.0,
-            f"{pearson(counts_seen, speedups_seen):.2f}")
-    csv.add("table10/pearson_all_hw", 0.0, f"{pearson(counts, speedups):.2f}")
-    best = max((max((r.speedup for r in rs), default=1.0) for rs in tuned.values()), default=1.0)
+    pearson_seen = pearson(counts_seen, speedups_seen)
+    pearson_all = pearson(counts, speedups)
+    csv.add("table10/pearson_seen_hw_paper_protocol", 0.0, f"{pearson_seen:.2f}")
+    csv.add("table10/pearson_all_hw", 0.0, f"{pearson_all:.2f}")
+    best = max((max((r.speedup for r in rs), default=1.0) for rs in tuned.values()),
+               default=1.0)
     csv.add("table10/max_speedup", 0.0, f"{best:.2f}x")
+    all_results = [r for rs in tuned.values() for r in rs]
+    overall = geomean_speedup(all_results)
+    sim_rank_corr = float(np.mean(rank_corrs)) if rank_corrs else 0.0
+    mean_regret = float(np.mean(regrets)) if regrets else 1.0
+    max_regret = float(np.max(regrets)) if regrets else 1.0
+    csv.add("table10/geomean_speedup_all", 0.0, f"{overall:.3f}x")
+    csv.add("table10/sim_rank_correlation_mean", 0.0,
+            f"{sim_rank_corr:+.2f} over {len(rank_corrs)} tuned workloads "
+            f"(reported, not gated: trained on default blocks only)")
+    csv.add("table10/sim_mean_regret", 0.0,
+            f"{mean_regret:.4f} (max {max_regret:.4f}) top-{SIM_TOP_K} vs "
+            f"exhaustive best over {len(regrets)} workloads")
 
     # --- Fig 9: gap before/after tuning on the tuned points ----------------
+    gaps_before, gaps_after = [], []
+    per_hw_gap = {}
     for hw, results in tuned.items():
         if not results:
             continue
         before, after = [], []
-        hw_rows = [i for i, (h, u) in enumerate(zip(ds.hw_names, report.underperforming)) if h == hw and u]
+        hw_rows = [i for i, (h, u) in enumerate(zip(ds.hw_names, report.underperforming))
+                   if h == hw and u]
         yhat = ceiling.predict_ceiling(ds.X[hw_rows]) if hw_rows else np.array([])
         for j, r in enumerate(results):
             i = hw_rows[j]
@@ -63,5 +181,93 @@ def run(csv: Csv):
             eff_after = min(eff_before * r.speedup, 1.0)
             before.append(float(yhat[j] - eff_before))
             after.append(float(yhat[j] - eff_after))
+        per_hw_gap[hw] = (float(np.mean(before)), float(np.mean(after)))
+        gaps_before += before
+        gaps_after += after
         csv.add(f"fig9/{hw}", 0.0,
                 f"gap_before={np.mean(before):.3f}|gap_after={np.mean(after):.3f}")
+    gap_before = float(np.mean(gaps_before)) if gaps_before else 0.0
+    gap_after = float(np.mean(gaps_after)) if gaps_after else 0.0
+    csv.add("fig9/gap_closure", 0.0,
+            f"mean {gap_before:.3f} -> {gap_after:.3f} over {len(gaps_before)} tuned")
+
+    return {
+        "frac_gap_below_0.1": below,
+        "pearson_seen_hw": pearson_seen,
+        "pearson_all_hw": pearson_all,
+        "max_speedup": best,
+        "sim_geomean_speedup": overall,
+        "sim_rank_correlation_mean": sim_rank_corr,
+        "sim_mean_regret": mean_regret,
+        "sim_max_regret": max_regret,
+        "gap_before_mean": gap_before,
+        "gap_after_mean": gap_after,
+        "per_hw_gap": per_hw_gap,
+        "n_tuned_workloads": len(all_results),
+    }
+
+
+def run(csv: Csv, smoke: bool = False) -> dict:
+    real = _real_kernel_tuning(csv)
+    sim = _dataset_tuning(csv)
+    results = {"real": real, "sim": sim,
+               # flat ratio-valued metrics for the trajectory baseline
+               "real_speedup": real["speedup"],
+               "real_rank_correlation": real["rank_correlation"],
+               "sim_geomean_speedup": sim["sim_geomean_speedup"],
+               "sim_rank_correlation_mean": sim["sim_rank_correlation_mean"],
+               "sim_mean_regret": sim["sim_mean_regret"],
+               "gap_closure_delta": sim["gap_before_mean"] - sim["gap_after_mean"]}
+    if smoke:
+        assert real["launched_all_pass_sp2xx"], (
+            f"tuner launched candidates the SP2xx lint rejects: "
+            f"{real['dirty_candidates']}"
+        )
+        assert real["speedup"] >= MIN_REAL_SPEEDUP, (
+            f"tuned fused_moe config {real['best_blocks']} is only "
+            f"{real['speedup']:.2f}x over the default blocks "
+            f"(< {MIN_REAL_SPEEDUP}x) in timed execution"
+        )
+        assert real["rank_correlation"] >= MIN_RANK_CORR, (
+            f"predicted-vs-measured rank correlation {real['rank_correlation']:+.2f} "
+            f"< {MIN_RANK_CORR} over the measured top-{real['n_measured']}"
+        )
+        assert sim["sim_mean_regret"] <= MAX_SIM_REGRET, (
+            f"synperf top-{SIM_TOP_K} mean regret {sim['sim_mean_regret']:.4f} "
+            f"> {MAX_SIM_REGRET} vs the exhaustive hwsim best over "
+            f"{sim['n_tuned_workloads']} workloads"
+        )
+        assert sim["sim_geomean_speedup"] > 1.0, (
+            f"dataset tuning produced no speedup "
+            f"(geomean {sim['sim_geomean_speedup']:.3f}x)"
+        )
+        assert sim["gap_after_mean"] < sim["gap_before_mean"], (
+            f"diagnosed performance gap did not close: mean "
+            f"{sim['gap_before_mean']:.3f} -> {sim['gap_after_mean']:.3f}"
+        )
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert speedup + SP2xx-cleanliness + rank "
+                         "correlation + gap closure (CI gate)")
+    ap.add_argument("--json", help="write BENCH_perf_gap.json-style artifact here")
+    args = ap.parse_args(argv)
+    csv = Csv()
+    print("name,value,derived")
+    try:
+        results = run(csv, smoke=args.smoke)
+        failed = False
+    except AssertionError as e:
+        print(f"# SMOKE FAILURE: {e}", file=sys.stderr)
+        results = {"error": str(e)}
+        failed = True
+    if args.json:
+        write_bench_json(args.json, csv, **results, passed=not failed)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

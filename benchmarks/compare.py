@@ -1,0 +1,155 @@
+"""Perf-trajectory gate: compare the gated ``BENCH_*.json`` metrics of this
+run against the committed baseline snapshot (``results/bench_baseline/``),
+failing when a ratio-valued metric regresses beyond its tolerance.
+
+Only *ratio-valued* metrics are gated (speedups, correlations, error
+reductions, fractions) — they are dimensionless and hold on shared CI
+runners where absolute timings do not. The baseline manifest
+(``metrics.json``) declares per-metric: which artifact file and JSON key it
+comes from, the baseline value, the good direction, and the relative
+tolerance.
+
+Usage::
+
+    python -m benchmarks.compare --baseline results/bench_baseline [DIR]
+    python -m benchmarks.compare --write-baseline results/bench_baseline [DIR]
+
+``DIR`` is where the fresh ``BENCH_*.json`` artifacts live (default: cwd).
+``--write-baseline`` refreshes the snapshot from the same artifacts
+(tolerances/directions of existing entries are preserved).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional
+
+#: the gated trajectory: every entry is a dimensionless ratio. ``direction``
+#: "higher" means larger is better (gate fires when value drops below
+#: baseline*(1-rel_tol)); "lower" the reverse. Adding a metric = add a row
+#: here + regenerate the snapshot with --write-baseline.
+GATED_METRICS: List[Dict[str, Any]] = [
+    # perf-gap / autotuning (ISSUE 8)
+    {"file": "BENCH_perf_gap.json", "key": "real_speedup",
+     "direction": "higher", "rel_tol": 0.35},  # interpret-mode timing ratio
+    {"file": "BENCH_perf_gap.json", "key": "real_rank_correlation",
+     "direction": "higher", "rel_tol": 0.5},
+    {"file": "BENCH_perf_gap.json", "key": "sim_geomean_speedup",
+     "direction": "higher", "rel_tol": 0.05},
+    {"file": "BENCH_perf_gap.json", "key": "sim_mean_regret",
+     "direction": "lower", "rel_tol": 0.05},
+    # kernel MAPE (paper Table VIII)
+    {"file": "BENCH_kernel_mape.json", "key": "error_reduction_seen",
+     "direction": "higher", "rel_tol": 0.3},
+    {"file": "BENCH_kernel_mape.json", "key": "error_reduction_unseen",
+     "direction": "higher", "rel_tol": 0.3},
+    # batched-predictor overhead (ISSUE 2): speedup ratio
+    {"file": "BENCH_overhead.json", "key": "batched_speedup",
+     "direction": "higher", "rel_tol": 0.3},
+    # multi-hw sweep (ISSUE 3): sweep cost over single-hw cost
+    {"file": "BENCH_sweep.json", "key": "ratio_vs_single",
+     "direction": "lower", "rel_tol": 0.3},
+    # placement (ISSUE 4): routing agreement with the oracle
+    # (top-1 match is a boolean in the artifact, already asserted by the
+    # placement smoke gate — only the ratio-valued spearman is tracked here)
+    {"file": "BENCH_placement.json", "key": "cost_rank_spearman",
+     "direction": "higher", "rel_tol": 0.15},
+    # parallelism (ISSUE 5): interleaved-1F1B bubble over GPipe's
+    {"file": "BENCH_parallelism.json", "key": "bubble_ratio",
+     "direction": "lower", "rel_tol": 0.1},
+]
+
+
+def _read_metric(run_dir: str, file: str, key: str) -> Optional[float]:
+    path = os.path.join(run_dir, file)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        payload = json.load(f)
+    val = payload.get(key)
+    if isinstance(val, (int, float)) and not isinstance(val, bool):
+        return float(val)
+    return None
+
+
+def collect(run_dir: str) -> Dict[str, Dict[str, Any]]:
+    """The current run's gated metric values, keyed ``file::key``."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for m in GATED_METRICS:
+        val = _read_metric(run_dir, m["file"], m["key"])
+        if val is not None:
+            out[f"{m['file']}::{m['key']}"] = {**m, "value": val}
+    return out
+
+
+def write_baseline(baseline_dir: str, run_dir: str) -> int:
+    os.makedirs(baseline_dir, exist_ok=True)
+    path = os.path.join(baseline_dir, "metrics.json")
+    metrics = collect(run_dir)
+    if not metrics:
+        print(f"no gated BENCH_*.json metrics found in {run_dir!r}", file=sys.stderr)
+        return 2
+    with open(path, "w") as f:
+        json.dump({"metrics": metrics}, f, indent=2, sort_keys=True)
+    print(f"wrote {path} ({len(metrics)} gated metrics)")
+    return 0
+
+
+def compare(baseline_dir: str, run_dir: str) -> int:
+    path = os.path.join(baseline_dir, "metrics.json")
+    with open(path) as f:
+        baseline = json.load(f)["metrics"]
+    failures = []
+    checked = 0
+    for name, base in sorted(baseline.items()):
+        cur = _read_metric(run_dir, base["file"], base["key"])
+        if cur is None:
+            # the artifact may legitimately be absent (partial run); missing
+            # metrics are reported but do not fail the gate on their own
+            print(f"  SKIP {name}: no current value in {run_dir}")
+            continue
+        checked += 1
+        bval, tol = float(base["value"]), float(base["rel_tol"])
+        if base["direction"] == "higher":
+            floor = bval * (1.0 - tol)
+            ok = cur >= floor
+            bound = f">= {floor:.4g}"
+        else:
+            ceil = bval * (1.0 + tol)
+            ok = cur <= ceil
+            bound = f"<= {ceil:.4g}"
+        status = "ok  " if ok else "FAIL"
+        print(f"  {status} {name}: {cur:.4g} (baseline {bval:.4g}, gate {bound})")
+        if not ok:
+            failures.append(name)
+    if checked == 0:
+        print("no gated metrics present in the current run — nothing compared",
+              file=sys.stderr)
+        return 2
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed beyond tolerance: "
+              f"{failures}", file=sys.stderr)
+        return 1
+    print(f"\nall {checked} gated metrics within tolerance of the baseline")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--baseline", metavar="DIR",
+                      help="compare the current artifacts against this snapshot")
+    mode.add_argument("--write-baseline", metavar="DIR",
+                      help="(re)write the snapshot from the current artifacts")
+    ap.add_argument("run_dir", nargs="?", default=".",
+                    help="directory holding the fresh BENCH_*.json artifacts")
+    args = ap.parse_args(argv)
+    if args.write_baseline:
+        return write_baseline(args.write_baseline, args.run_dir)
+    return compare(args.baseline, args.run_dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,18 @@
 """Beyond simulation (paper §VII): use the P80 quantile ceiling to find
-underperforming fused-MoE configurations and close the gap by autotuning
-(block_m, block_f, stages) — the 1.7x-speedup workflow.
+underperforming fused-MoE configurations and close the gap with the
+predictor-driven autotuner (``repro.tune``) — the 1.7x-speedup workflow.
+
+The search space is derived from the kernel's actual ops signature
+(``block_m``/``block_f``), every candidate is pre-filtered through the
+static SP2xx geometry lint, and the predictor ranks survivors so only the
+top-k are measured.
 
 Run: PYTHONPATH=src python examples/optimize_kernel.py
 """
 
 from repro.core.dataset import build_dataset
 from repro.core.quantile import perf_gap, train_ceiling
-from repro.core.tuner import geomean_speedup, pearson, tune_underperformers
+from repro.tune import block_params, geomean_speedup, pearson, tune_underperformers
 
 
 def main():
@@ -16,14 +21,20 @@ def main():
 
     print("training the P80 ceiling model (pinball loss)...")
     ceiling = train_ceiling(ds, quantile=0.8)
-    report = perf_gap(ceiling, ds, threshold=0.1)
+    # this seed's dataset tracks its ceiling closely; 0.05 is the gap
+    # threshold that surfaces a meaningful underperformer population
+    threshold = 0.05
+    report = perf_gap(ceiling, ds, threshold=threshold)
 
-    print(f"\ngap <= 0.1 for {(report.gaps <= 0.1).mean()*100:.0f}% of points")
+    print(f"\ngap <= {threshold} for "
+          f"{(report.gaps <= threshold).mean()*100:.0f}% of points")
     print("underperforming points by hardware (the A40-story analogue):")
     for hw, c in sorted(report.per_hw_counts.items(), key=lambda kv: -kv[1]):
         print(f"  {hw:16s} {c:4d}  ({100*report.per_hw_frac[hw]:.1f}%)")
 
-    print("\nautotuning up to 20 underperformers per hardware...")
+    knobs = block_params("fused_moe")
+    print(f"\nsearch space (from the kernel's ops signature): {sorted(knobs)}")
+    print("autotuning up to 20 underperformers per hardware...")
     tuned = tune_underperformers(ds, report.underperforming, per_hw_limit=20)
     counts, gains = [], []
     for hw, results in sorted(tuned.items(), key=lambda kv: -len(kv[1])):
@@ -42,6 +53,8 @@ def main():
               f"most-chosen config {dict(top_cfg)}")
     print(f"\nPearson(underperforming count, geomean speedup) = "
           f"{pearson(counts, gains):.2f}  (paper: 0.86)")
+    print("\nto tune the real Pallas kernel with timed execution:")
+    print("  PYTHONPATH=src python -m repro.tune --kernel fused_moe --hw tpu-v4")
 
 
 if __name__ == "__main__":

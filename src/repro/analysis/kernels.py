@@ -125,62 +125,84 @@ def check_kernel_resources(
 
     dtype_bytes = COMPUTE_DTYPE_BYTES.get(cfg.compute_dtype, 2)
     for name, kwargs in workloads:
-        grid_fn, vmem_fn = KERNEL_HELPERS[name]
         blocks = dict((block_overrides or {}).get(name, {}))
-        try:
-            grid = grid_fn(**kwargs, **blocks)
-        except ValueError as e:
+        diags += check_blocks(
+            name, kwargs, blocks, hws=hws, dtype_bytes=dtype_bytes, arch=cfg.name
+        )
+    return diags
+
+
+def check_blocks(
+    name: str,
+    kwargs: Dict[str, Any],
+    blocks: Optional[Dict[str, int]] = None,
+    *,
+    hws: Optional[Sequence[TPUSpec]] = None,
+    dtype_bytes: int = 2,
+    arch: str = "tuner",
+) -> List[Diagnostic]:
+    """SP201-SP203 geometry lint for ONE (kernel, workload, block-config)
+    triple across ``hws`` — no :class:`ArchConfig` needed. This is the exact
+    check the ``repro.tune`` autotuner runs over every candidate before it
+    is allowed to launch, so nothing the auditor would reject ever runs."""
+    hws = list(hws) if hws is not None else list(REGISTRY.values())
+    blocks = dict(blocks or {})
+    grid_fn, vmem_fn = KERNEL_HELPERS[name]
+    diags: List[Diagnostic] = []
+    try:
+        grid = grid_fn(**kwargs, **blocks)
+    except ValueError as e:
+        diags.append(
+            Diagnostic(
+                code="SP202",
+                severity="error",
+                check="kernel-resource",
+                message=str(e),
+                arch=arch,
+                where=f"kernels/{name}:grid_shape {kwargs}",
+                data={"kernel": name, "workload": kwargs, "blocks": blocks},
+            )
+        )
+        return diags
+    if any(g <= 0 for g in grid):
+        diags.append(
+            Diagnostic(
+                code="SP203",
+                severity="error",
+                check="kernel-resource",
+                message=f"{name} launches a degenerate grid {grid} — nothing executes",
+                arch=arch,
+                where=f"kernels/{name}:grid_shape {kwargs}",
+                data={"kernel": name, "grid": list(grid), "workload": kwargs},
+            )
+        )
+        return diags
+    vm_kw = dict(blocks)
+    if name != "scaled_mm":  # int8 kernel: operand widths are fixed
+        vm_kw["dtype_bytes"] = dtype_bytes
+    footprint = vmem_fn(**kwargs, **vm_kw)
+    for hw in hws:
+        budget = hw.vmem_mb * 2**20
+        if footprint > budget:
             diags.append(
                 Diagnostic(
-                    code="SP202",
+                    code="SP201",
                     severity="error",
                     check="kernel-resource",
-                    message=str(e),
-                    arch=cfg.name,
-                    where=f"kernels/{name}:grid_shape {kwargs}",
-                    data={"kernel": name, "workload": kwargs, "blocks": blocks},
+                    message=(
+                        f"{name} working set {footprint / 2**20:.1f} MiB overflows "
+                        f"{hw.name} VMEM ({hw.vmem_mb:g} MiB) with blocks "
+                        f"{blocks or 'default'} — the compile would spill or abort"
+                    ),
+                    arch=arch,
+                    where=f"kernels/{name}:vmem_footprint {kwargs} on {hw.name}",
+                    data={
+                        "kernel": name,
+                        "hw": hw.name,
+                        "footprint_bytes": footprint,
+                        "vmem_bytes": int(budget),
+                        "blocks": blocks,
+                    },
                 )
             )
-            continue
-        if any(g <= 0 for g in grid):
-            diags.append(
-                Diagnostic(
-                    code="SP203",
-                    severity="error",
-                    check="kernel-resource",
-                    message=f"{name} launches a degenerate grid {grid} — nothing executes",
-                    arch=cfg.name,
-                    where=f"kernels/{name}:grid_shape {kwargs}",
-                    data={"kernel": name, "grid": list(grid), "workload": kwargs},
-                )
-            )
-            continue
-        vm_kw = dict(blocks)
-        if name != "scaled_mm":  # int8 kernel: operand widths are fixed
-            vm_kw["dtype_bytes"] = dtype_bytes
-        footprint = vmem_fn(**kwargs, **vm_kw)
-        for hw in hws:
-            budget = hw.vmem_mb * 2**20
-            if footprint > budget:
-                diags.append(
-                    Diagnostic(
-                        code="SP201",
-                        severity="error",
-                        check="kernel-resource",
-                        message=(
-                            f"{name} working set {footprint / 2**20:.1f} MiB overflows "
-                            f"{hw.name} VMEM ({hw.vmem_mb:g} MiB) with blocks "
-                            f"{blocks or 'default'} — the compile would spill or abort"
-                        ),
-                        arch=cfg.name,
-                        where=f"kernels/{name}:vmem_footprint {kwargs} on {hw.name}",
-                        data={
-                            "kernel": name,
-                            "hw": hw.name,
-                            "footprint_bytes": footprint,
-                            "vmem_bytes": int(budget),
-                            "blocks": blocks,
-                        },
-                    )
-                )
     return diags

@@ -105,19 +105,32 @@ def gemm_tile_heuristic(M, N, K, hw: TPUSpec, dtype_bytes: int = 2):
 def decompose_gemm(X: dict, hw: TPUSpec) -> TaskArray:
     M, N, K = X["M"], X["N"], X["K"]
     b = X.get("dtype_bytes", 2)
-    tm, tn = gemm_tile_heuristic(M, N, K, hw, b)
+    tm_h, tn_h = gemm_tile_heuristic(M, N, K, hw, b)
+    # explicit kernel block choices (the autotuner's candidates) override the
+    # XLA/Mosaic heuristic; absent keys reproduce the default decomposition
+    tm = int(X.get("block_m", tm_h))
+    tn = int(X.get("block_n", tn_h))
     ms = _tile_sizes(M, tm)
     ns = _tile_sizes(N, tn)
     m = np.repeat(ms, len(ns))
     n = np.tile(ns, len(ms))
+    if "block_k" in X:
+        bk = int(X["block_k"])
+        k_panel = float(min(K, bk))
+        # K is streamed in ceil(K/bk) panels with the f32 accumulator block
+        # re-read/written once per extra panel
+        acc = (np.ceil(K / bk) - 1.0) * m * n * 8.0
+    else:
+        k_panel = float(min(K, 2048))
+        acc = 0.0
     t = TaskArray.build(
         len(m),
         mxu=2.0 * m * n * K,
         vpu=m * n,
         hbm=(m + n) * K * b + m * n * b,
-        vmem=(m + n) * K * b + m * n * (b + 4),
+        vmem=(m + n) * K * b + m * n * (b + 4) + acc,
         align=_util(m, 8) * _util(n, 128) * _util([K], 128)[0],
-        ws=(np.minimum(K, 2048) * (m + n)) * b + m * n * 4,
+        ws=(k_panel * (m + n)) * b + m * n * 4,
     )
     return t
 
@@ -142,7 +155,8 @@ def decompose_attention(X: dict, hw: TPUSpec) -> TaskArray:
     qlen, kvlen, hd = X["qlen"], X["kvlen"], X["hd"]
     causal = X.get("causal", 1)
     b = X.get("dtype_bytes", 2)
-    bq = min(256, qlen) if qlen > 1 else 1
+    bq_default = min(256, qlen) if qlen > 1 else 1
+    bq = max(1, min(int(X.get("block_q", bq_default)), qlen))
     nq = _ceil(qlen, bq)
     m = _tile_sizes(qlen, bq)  # (nq,)
     starts = np.arange(nq) * bq
@@ -151,15 +165,24 @@ def decompose_attention(X: dict, hw: TPUSpec) -> TaskArray:
     if causal:
         kv_eff = np.minimum(kvlen, offset + starts + m)
     rows = G * m
+    if "block_k" in X:
+        bk = int(X["block_k"])
+        kv_panel = np.minimum(kv_eff, float(bk))
+        # online-softmax accumulators (o, l, m) are re-updated once per extra
+        # KV block the inner loop streams
+        acc = (np.ceil(kv_eff / bk) - 1.0) * (rows * hd + 2.0 * rows) * 8.0
+    else:
+        kv_panel = np.minimum(kv_eff, 512)
+        acc = 0.0
     one = TaskArray.build(
         nq,
         mxu=2.0 * rows * kv_eff * hd * 2.0,
         xu=rows * kv_eff,
         vpu=4.0 * rows * kv_eff,
         hbm=(2.0 * rows * hd + 2.0 * kv_eff * hd) * b,
-        vmem=(2.0 * rows * hd + 2.0 * kv_eff * hd) * b + rows * kv_eff * b,
+        vmem=(2.0 * rows * hd + 2.0 * kv_eff * hd) * b + rows * kv_eff * b + acc,
         align=_util(rows, 8) * _util([hd], 128)[0],
-        ws=(rows * hd * 2 + np.minimum(kv_eff, 512) * hd * 2) * b + rows * hd * 4,
+        ws=(rows * hd * 2 + kv_panel * hd * 2) * b + rows * hd * 4,
     )
     reps = B * H
     return TaskArray(
@@ -177,7 +200,7 @@ def decompose_attention(X: dict, hw: TPUSpec) -> TaskArray:
 
 def _rowwise(X, b, vpu_per_el, xu_per_el, streams):
     seq, dim = X["seq"], X["dim"]
-    rows = _tile_sizes(seq, 512)
+    rows = _tile_sizes(seq, max(1, int(X.get("block_rows", 512))))
     n = len(rows)
     return TaskArray.build(
         n,
@@ -243,13 +266,17 @@ def decompose_fused_moe(X: dict, hw: TPUSpec) -> TaskArray:
     n = len(m)
     # per m-tile: all three expert matrices streamed once (weight-dominated)
     w_bytes = 3.0 * H * N * b
+    # the kernel's inner F loop re-updates the (m, H) f32 accumulator scratch
+    # once per extra f-block — the VMEM cost of choosing a small block_f
+    n_f = math.ceil(N / bf)
+    acc = (n_f - 1) * m * H * 8.0
     return TaskArray.build(
         n,
         mxu=2.0 * m * 3.0 * H * N,
         xu=m * N,
         vpu=2.0 * m * N,
         hbm=w_bytes + (2.0 * m * H + m * N) * b,
-        vmem=w_bytes + (2.0 * m * H + m * N) * b + m * H * 4,
+        vmem=w_bytes + (2.0 * m * H + m * N) * b + m * H * 4 + acc,
         align=_util(m, 8) * _util([min(bf, N)], 128)[0],
         ws=(bm * H + (H + bm) * bf) * b * X.get("stages", cfgd["stages"]) + bm * H * 4,
     )

@@ -185,7 +185,37 @@ def layer_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list
     return calls
 
 
-def model_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list:
+def apply_tuned(calls: list, tuned: Optional[dict]) -> list:
+    """Merge a tuned block table (``repro.tune.TunedConfigs.for_hw(hw)``:
+    kernel family -> block kwargs) into every matching kernel call's
+    workload. Keys already present in a call's ``X`` win, so explicit
+    per-call choices are never overridden; calls of untuned families pass
+    through untouched."""
+    if not tuned:
+        return calls
+    out: list = []
+    for item in calls:
+        if isinstance(item, KernelCall):
+            blocks = tuned.get(item.kind)
+            if blocks:
+                item = KernelCall(
+                    item.kind,
+                    {**{k: int(v) for k, v in blocks.items()}, **item.X},
+                    item.count,
+                )
+            out.append(item)
+        elif isinstance(item, CommCall):
+            out.append(item)
+        else:  # (label, reps, sub-sequence) group
+            label, reps, seq = item
+            out.append((label, reps, apply_tuned(seq, tuned)))
+    return out
+
+
+def model_calls(
+    cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int,
+    tuned: Optional[dict] = None,
+) -> list:
     calls = []
     per_layer = layer_calls(cfg, B, qlen, kvlen, tp)
     calls.append(("layers", cfg.n_layers, per_layer))
@@ -205,7 +235,7 @@ def model_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list
             dataclasses.replace(cfg, family="dense"), B, cfg.enc_frames, cfg.enc_frames, tp
         )
         calls.append(("encoder", cfg.n_enc_layers, enc))
-    return calls
+    return apply_tuned(calls, tuned)
 
 
 def pp_boundary_hops(pp: int, schedule: str = "gpipe", interleave: int = 2) -> int:
@@ -222,6 +252,7 @@ def pp_boundary_hops(pp: int, schedule: str = "gpipe", interleave: int = 2) -> i
 def request_calls(
     cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
     pp_schedule: str = "gpipe", pp_interleave: int = 2,
+    tuned: Optional[dict] = None,
 ) -> list:
     """The full request's call sequence: prefill + Simpson-weighted decode
     samples (3 cache lengths integrate the growing KV) + PP stage-boundary
@@ -233,13 +264,13 @@ def request_calls(
     (``pp_schedule="1f1b"``) routes every activation through
     ``pp * pp_interleave - 1`` chunk boundaries, all of them device hops
     on the pipeline ring (``dist.pipeline``)."""
-    groups = [("prefill", 1.0, model_calls(cfg, B, lin, lin, tp))]
+    groups = [("prefill", 1.0, model_calls(cfg, B, lin, lin, tp, tuned))]
     for label, w, kvlen in (
         ("decode_start", lout / 6.0, lin),
         ("decode_mid", 4.0 * lout / 6.0, lin + lout // 2),
         ("decode_end", lout / 6.0, lin + lout),
     ):
-        groups.append((label, w, model_calls(cfg, B, 1, kvlen, tp)))
+        groups.append((label, w, model_calls(cfg, B, 1, kvlen, tp, tuned)))
     if pp > 1:
         # stage boundary activations, per token step and per prefill
         boundary = pp_boundary_hops(pp, pp_schedule, pp_interleave) * (
@@ -307,11 +338,13 @@ def _resolve_predictor(predictor, kernel_time, comm_time):
 def step_estimate(
     cfg: ArchConfig, B: int, qlen: int, kvlen: int, *, tp: int,
     predictor=None, kernel_time: Optional[Callable] = None,
-    comm_time: Optional[Callable] = None,
+    comm_time: Optional[Callable] = None, tuned: Optional[dict] = None,
 ) -> Estimate:
-    """One serving step (all layers + head) as a full ``Estimate``."""
+    """One serving step (all layers + head) as a full ``Estimate``.
+    ``tuned`` (a ``TunedConfigs.for_hw(hw)`` table) prices the step with
+    autotuned kernel block configs instead of the defaults."""
     pred = _resolve_predictor(predictor, kernel_time, comm_time)
-    return pred.predict(model_calls(cfg, B, qlen, kvlen, tp))
+    return pred.predict(model_calls(cfg, B, qlen, kvlen, tp, tuned))
 
 
 def step_time(
@@ -330,18 +363,20 @@ def request_estimate(
     pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,
     pp_interleave: int = 2,
     predictor=None, kernel_time: Optional[Callable] = None,
-    comm_time: Optional[Callable] = None,
+    comm_time: Optional[Callable] = None, tuned: Optional[dict] = None,
 ) -> Estimate:
     """prefill + Simpson-integrated decode as one batched prediction, with
     the schedule's analytical PP bubble surcharge (``pp_bubble``) applied
     to the whole estimate. ``pp_schedule``/``pp_microbatches``/
     ``pp_interleave`` pick the pipeline schedule (GPipe default; the
     interleaved 1F1B of ``dist.pipeline`` shrinks the bubble at the same
-    microbatch count)."""
+    microbatch count). ``tuned`` applies autotuned kernel block configs
+    (``repro.tune.TunedConfigs.for_hw(hw)``)."""
     pred = _resolve_predictor(predictor, kernel_time, comm_time)
     est = pred.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp,
                                      pp_schedule=pp_schedule,
-                                     pp_interleave=pp_interleave))
+                                     pp_interleave=pp_interleave,
+                                     tuned=tuned))
     if pp > 1:
         est = est.scaled(
             pp_bubble(pp, pp_microbatches, pp_schedule, pp_interleave)

@@ -46,13 +46,36 @@ def _noise(kind: str, X: dict, hw: TPUSpec, amp: float = 0.03) -> float:
     return float(1.0 + amp * rng.standard_normal())
 
 
+# tunable config keys the simulator prices per kernel family; passing any
+# other key raises instead of being silently ignored (the old tuner searched
+# a phantom knob for families whose config dict was dropped entirely)
+CONFIG_KEYS = {
+    "fused_moe": {"block_m", "block_f", "stages"},
+    "gemm": {"block_m", "block_n", "block_k"},
+    "scaled_mm": {"block_m", "block_n", "block_k"},
+    "attention": {"block_q", "block_k"},
+    "rmsnorm": {"block_rows"},
+    "silu_mul": {"block_rows"},
+}
+
+
 def simulate(kind: str, X: dict, hw: TPUSpec, config: dict | None = None) -> float:
-    """Simulated kernel latency in seconds."""
+    """Simulated kernel latency in seconds. ``config`` carries tunable
+    kernel block choices (``CONFIG_KEYS``); they reach the decomposer as
+    workload keys, so tiling, alignment and working sets all respond."""
     Xs = dict(X)
+    if config:
+        unknown = set(config) - CONFIG_KEYS.get(kind, set())
+        if unknown:
+            raise ValueError(
+                f"hwsim.simulate({kind!r}): unknown config keys {sorted(unknown)}; "
+                f"tunable: {sorted(CONFIG_KEYS.get(kind, set()))}"
+            )
+        Xs.update(config)
     if kind == "fused_moe":
         cfgd = default_moe_config(X, hw)
-        cfg = {**cfgd, **(config or {})}
-        Xs.update(cfg)
+        for k, v in cfgd.items():
+            Xs.setdefault(k, v)
     tasks = decompose(kind, Xs, hw)
     if len(tasks) == 0:
         return hw.launch_us * 1e-6

@@ -1,70 +1,36 @@
-"""Model-guided kernel optimization (paper §VII-C): brute-force autotuning of
-the fused-MoE kernel's (block_m, block_f, stages) on the configurations the
-P80 ceiling model flags as underperforming; validates that diagnosed gap
-density predicts realized tuning gains (the paper's Pearson-0.86 result)."""
+"""Compatibility shim — the autotuner moved to :mod:`repro.tune`.
+
+The original module brute-forced a hard-coded ``(block_m, block_f, stages)``
+space through hwsim, including a ``stages`` knob no Pallas kernel accepts.
+The real loop (signature-derived spaces, SP2xx prefilter, predictor
+ranking, timed top-k) lives in ``repro.tune``; this module keeps the old
+entry points importable for existing callers.
+"""
 from __future__ import annotations
 
-import dataclasses
-import itertools
+from repro.core.hardware import TPUSpec
+from repro.tune.tuner import (
+    TuneResult,
+    geomean_speedup,
+    pearson,
+    spearman,
+    tune_underperformers,
+    tune_workload,
+)
 
-import numpy as np
-
-from repro.core import hwsim
-from repro.core.dataset import KernelDataset
-from repro.core.hardware import REGISTRY, TPUSpec
-
-SEARCH_SPACE = {
-    "block_m": (32, 64, 128, 256),
-    "block_f": (128, 256, 512),
-    "stages": (2, 3, 4),
-}
-
-
-@dataclasses.dataclass
-class TuneResult:
-    workload: dict
-    hw: str
-    t_default: float
-    t_best: float
-    best_config: dict
-
-    @property
-    def speedup(self) -> float:
-        return self.t_default / self.t_best
+__all__ = [
+    "TuneResult",
+    "geomean_speedup",
+    "pearson",
+    "spearman",
+    "tune_one",
+    "tune_underperformers",
+    "tune_workload",
+]
 
 
 def tune_one(workload: dict, hw: TPUSpec) -> TuneResult:
-    t_default = hwsim.simulate("fused_moe", workload, hw)
-    best_t, best_cfg = t_default, {}
-    for bm, bf, st in itertools.product(*SEARCH_SPACE.values()):
-        cfg = {"block_m": bm, "block_f": bf, "stages": st}
-        t = hwsim.simulate("fused_moe", workload, hw, config=cfg)
-        if t < best_t:
-            best_t, best_cfg = t, cfg
-    return TuneResult(workload, hw.name, t_default, best_t, best_cfg)
-
-
-def tune_underperformers(
-    ds: KernelDataset, under_mask: np.ndarray, per_hw_limit: int = 40,
-) -> dict[str, list[TuneResult]]:
-    """Tune up to N unique underperforming configurations per hardware."""
-    out: dict[str, list[TuneResult]] = {}
-    hw_arr = np.asarray(ds.hw_names)
-    for hw_name in sorted(set(ds.hw_names)):
-        idxs = np.where((hw_arr == hw_name) & under_mask)[0][:per_hw_limit]
-        results = [tune_one(ds.workloads[i], REGISTRY[hw_name]) for i in idxs]
-        out[hw_name] = results
-    return out
-
-
-def geomean_speedup(results: list[TuneResult]) -> float:
-    if not results:
-        return 1.0
-    return float(np.exp(np.mean([np.log(r.speedup) for r in results])))
-
-
-def pearson(x, y) -> float:
-    x, y = np.asarray(x, float), np.asarray(y, float)
-    if len(x) < 2 or x.std() == 0 or y.std() == 0:
-        return 0.0
-    return float(np.corrcoef(x, y)[0, 1])
+    """Old name for single-workload hwsim tuning (oracle-ranked, so the
+    result is the exhaustive-search optimum over the measured top-k and
+    the speedup is always >= 1)."""
+    return tune_workload(workload, hw)

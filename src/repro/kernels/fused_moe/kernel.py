@@ -8,8 +8,9 @@ in one kernel: grid (E, C/block_m, F/block_f) with the down-projection
 accumulated across the (sequential) F dimension in a VMEM scratch — the TPU
 analogue of the SGLang Triton fused-MoE kernel whose BLOCK_SIZE / num_warps /
 num_stages the paper autotunes. Here the tunable knobs are (block_m,
-block_f); the P80 ceiling model in repro.core.tuner searches exactly this
-space (benchmarks/bench_perf_gap.py).
+block_f); the ``repro.tune`` autotuner derives exactly this space from the
+ops signature, pre-filters it through the static SP2xx lint, and measures
+the predictor-ranked top-k (benchmarks/bench_perf_gap.py).
 """
 from __future__ import annotations
 

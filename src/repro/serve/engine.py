@@ -345,7 +345,7 @@ class ContinuousBatchingEngine(_EngineBase):
                  params=None, seed: int = 0, recorder=None,
                  admission: str = "fixed", predictor=None,
                  decode_slo_s: Optional[float] = None, mesh=None,
-                 audit=None):
+                 audit=None, tuned: Optional[dict] = None):
         assert cfg.family not in ("ssm", "hybrid", "audio", "vlm"), (
             "reference continuous-batching engine supports KV-cache LMs"
         )
@@ -378,6 +378,10 @@ class ContinuousBatchingEngine(_EngineBase):
         self.admission = admission
         self.predictor = predictor
         self.decode_slo_s = decode_slo_s
+        #: autotuned kernel block table for this engine's hardware
+        #: (``repro.tune.TunedConfigs.for_hw(hw)``); predicted admission
+        #: prices decode ticks with these blocks merged in
+        self.tuned = tuned
         #: one dict per admission decision: rid, projected kv, predicted_s,
         #: slo_s, admitted, forced (admitted despite violating, alone in pool)
         self.admission_log: list[dict] = []
@@ -415,7 +419,8 @@ class ContinuousBatchingEngine(_EngineBase):
 
         try:
             return self.predictor.predict(
-                model_calls(self.cfg, len(self.slots), 1, kv, tp=self.tp)
+                model_calls(self.cfg, len(self.slots), 1, kv, tp=self.tp,
+                            tuned=self.tuned)
             ).total_s
         except RuntimeError as e:  # unfitted estimator / comm regressor
             self.admission_fallback_reason = f"{type(e).__name__}: {e}"

@@ -114,6 +114,11 @@ class TraceRecorder:
     #: pipeline schedule the PP boundary traffic is recorded for
     pp_schedule: str = "gpipe"
     pp_interleave: int = 2
+    #: autotuned kernel block table (``repro.tune.TunedConfigs.for_hw(hw)``:
+    #: kernel family -> block kwargs); recorded steps lower with these
+    #: blocks merged into matching kernel calls, so the trace prices the
+    #: tuned engine, not the default one
+    tuned: Optional[dict] = None
     _mesh_tp: Optional[int] = dataclasses.field(default=None, init=False, repr=False)
     _mesh_pp: Optional[int] = dataclasses.field(default=None, init=False, repr=False)
 
@@ -174,7 +179,7 @@ class TraceRecorder:
             raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
         tp = self.resolved_tp if tp is None else tp
         pp = self.resolved_pp
-        calls = model_calls(cfg, B, qlen, kvlen, tp)
+        calls = model_calls(cfg, B, qlen, kvlen, tp, self.tuned)
         if pp > 1:
             from repro.core.e2e import pp_boundary_hops
             from repro.predict.api import CommCall
