@@ -14,7 +14,16 @@ Reports three things:
     (asserted in ``--smoke``);
   * simulation overhead — host wall-clock per simulated request of the
     discrete-event replay (the O(n log replicas) heap loop). Criterion
-    (asserted in ``--smoke``): under ``OVERHEAD_US_BUDGET`` per request.
+    (asserted in ``--smoke``): under ``OVERHEAD_US_BUDGET`` per request;
+  * the drift control loop (ISSUE 9) — an injected step-drift on the
+    assigned hardware, sized to flip the placement once corrected, is
+    replayed twice: frozen assignment vs ``monitor=`` re-routing.
+    Criteria (asserted in ``--smoke``): the re-routed replay's p95 is
+    *strictly* lower than the frozen one's, the drifted stream trips at
+    least one re-route, and an undrifted monitored stream trips **zero**
+    (false-positive bound). ``reroute_p95_ratio`` (re-routed / frozen
+    p95, lower = the loop helps more) feeds the ``benchmarks.compare``
+    trajectory gate.
 
 Also reported (not gated): the routed assignment of the two-class traffic
 mix, per-hardware utilization at each load point, and an autoscaled replay
@@ -35,6 +44,7 @@ from benchmarks.common import Csv, get_pipeweave, write_bench_json
 from repro.configs import get_arch
 from repro.predict import FeatureCache
 from repro.serve.fleet import AutoscalePolicy, FleetSimulator, WorkloadClass
+from repro.serve.monitor import DriftSpec, ResidualMonitor
 from repro.serve.placement import FleetRouter
 
 N_REQUESTS = 200_000
@@ -42,6 +52,20 @@ LOAD_FRACTIONS = (0.3, 0.6, 0.9)
 REPLICAS = 4
 OVERHEAD_US_BUDGET = 50.0  # generous for shared CI runners; locally ~3us
 SEED = 3
+# drift control loop: event-by-event Python path, so a smaller stream
+N_DRIFT = 50_000
+DRIFT_LOAD = 0.6  # fraction of the *undrifted* saturation rate
+
+#: the artifact's schema: every key write_bench_json must carry
+#: (tests/test_bench_schemas.py checks the compare.py gates against this)
+BENCH_KEYS = (
+    "n_requests", "assignment", "saturation_rate_rps",
+    "empty_fleet_abs_err_s", "load_fractions", "p95_s", "max_utilization",
+    "sim_overhead_us_per_request", "autoscaled_p95_s", "autoscale_replicas",
+    "drift_hw", "drift_factor", "reroute_count_drifted",
+    "reroute_count_undrifted", "p95_frozen_drifted_s",
+    "p95_rerouted_drifted_s", "reroute_p95_ratio",
+)
 
 
 def _build_sim() -> FleetSimulator:
@@ -92,6 +116,30 @@ def run(csv: Csv, smoke: bool = False) -> dict:
     csv.add("fleet/autoscaled_p95_ms", scaled.latency_p95_s * 1e3,
             f"fixed {fixed_p95*1e3:.2f}ms, replicas {traj}")
 
+    # drift control loop: step-drift the dominant assigned hardware by a
+    # factor sized to flip the placement once the monitor corrects for it
+    # (1.5x the best-vs-runner-up service ratio, at least 2x), then replay
+    # the same stream frozen vs monitored
+    drift_hw = sim.assignment["chat"]
+    chat_rows = sim.placements["chat"]
+    runner_up = next(r for r in chat_rows.rows if r.hw != drift_hw)
+    drift_factor = max(2.0, 1.5 * runner_up.total_s / chat_rows[drift_hw].total_s)
+    drift = DriftSpec(hw=drift_hw, factor=drift_factor)
+    drift_rate = DRIFT_LOAD * sat
+
+    calm = sim.replay(rate_rps=drift_rate, n_requests=N_DRIFT, seed=SEED,
+                      monitor=ResidualMonitor())
+    frozen = sim.replay(rate_rps=drift_rate, n_requests=N_DRIFT, seed=SEED,
+                        drift=drift)
+    routed = sim.replay(rate_rps=drift_rate, n_requests=N_DRIFT, seed=SEED,
+                        drift=drift, monitor=ResidualMonitor())
+    ratio = routed.latency_p95_s / frozen.latency_p95_s
+    csv.add("fleet/reroute_p95_ratio", ratio,
+            f"{drift_factor:.2f}x drift on {drift_hw}: frozen p95 "
+            f"{frozen.latency_p95_s*1e3:.2f}ms, re-routed "
+            f"{routed.latency_p95_s*1e3:.2f}ms, {len(routed.reroutes)} "
+            f"re-route(s), {len(calm.reroutes)} on the calm stream")
+
     results = {
         "n_requests": N_REQUESTS,
         "assignment": sim.assignment,
@@ -103,6 +151,13 @@ def run(csv: Csv, smoke: bool = False) -> dict:
         "sim_overhead_us_per_request": overhead_us,
         "autoscaled_p95_s": scaled.latency_p95_s,
         "autoscale_replicas": traj,
+        "drift_hw": drift_hw,
+        "drift_factor": drift_factor,
+        "reroute_count_drifted": len(routed.reroutes),
+        "reroute_count_undrifted": len(calm.reroutes),
+        "p95_frozen_drifted_s": frozen.latency_p95_s,
+        "p95_rerouted_drifted_s": routed.latency_p95_s,
+        "reroute_p95_ratio": ratio,
     }
     if smoke:
         assert exact_err <= 1e-9, (
@@ -116,6 +171,20 @@ def run(csv: Csv, smoke: bool = False) -> dict:
         assert overhead_us <= OVERHEAD_US_BUDGET, (
             f"fleet simulation costs {overhead_us:.1f}us per request > "
             f"{OVERHEAD_US_BUDGET}us budget"
+        )
+        assert len(calm.reroutes) == 0, (
+            f"undrifted monitored replay tripped {len(calm.reroutes)} "
+            f"re-route(s): {calm.reroutes} — the sustained-residual "
+            "threshold is supposed to bound false positives to zero"
+        )
+        assert len(routed.reroutes) >= 1, (
+            f"{drift_factor:.2f}x step drift on {drift_hw} never tripped "
+            "the monitor"
+        )
+        assert routed.latency_p95_s < frozen.latency_p95_s, (
+            f"re-routed p95 {routed.latency_p95_s:.4g}s not strictly below "
+            f"the frozen assignment's {frozen.latency_p95_s:.4g}s under "
+            f"{drift_factor:.2f}x drift on {drift_hw}"
         )
     return results
 
@@ -136,7 +205,8 @@ def main(argv=None) -> int:
         results = {"error": str(e)}
         failed = True
     if args.json:
-        write_bench_json(args.json, csv, **results, passed=not failed)
+        write_bench_json(args.json, csv, declared=BENCH_KEYS, **results,
+                         passed=not failed)
     return 1 if failed else 0
 
 

@@ -17,6 +17,14 @@ import sys
 import numpy as np
 
 from benchmarks.common import Csv, get_all_datasets, get_baseline, get_pipeweave, write_bench_json
+
+#: the artifact's schema (tests/test_bench_schemas.py gates compare.py
+#: keys against this)
+BENCH_KEYS = (
+    "mape_seen", "mape_unseen", "best_baseline_seen",
+    "best_baseline_unseen", "error_reduction_seen",
+    "error_reduction_unseen",
+)
 from repro.core.dataset import SEEN, mape
 
 BASELINE_NAMES = ("roofline", "linear", "habitat", "neusight")
@@ -102,7 +110,7 @@ def main(argv=None) -> int:
         results = {"error": str(e)}
         failed = True
     if args.json:
-        write_bench_json(args.json, csv, **results, passed=not failed)
+        write_bench_json(args.json, csv, declared=BENCH_KEYS, **results, passed=not failed)
     return 1 if failed else 0
 
 

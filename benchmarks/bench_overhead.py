@@ -15,6 +15,13 @@ import time
 import numpy as np
 
 from benchmarks.common import Csv, decode_sweep_trace, get_pipeweave, write_bench_json
+
+#: the artifact's schema (tests/test_bench_schemas.py gates compare.py
+#: keys against this)
+BENCH_KEYS = (
+    "trace_calls", "batched_speedup", "speedup_target",
+    "rel_diff_vs_scalar", "pred_us_per_gemm", "hwsim_us_per_gemm",
+)
 from repro.core import hwsim
 from repro.core.dataset import mape, sample_workload
 from repro.core.hardware import get_hw
@@ -111,7 +118,7 @@ def main(argv=None) -> int:
             file=sys.stderr,
         )
     if args.json:
-        write_bench_json(args.json, csv, **results, passed=bool(ok))
+        write_bench_json(args.json, csv, declared=BENCH_KEYS, **results, passed=bool(ok))
     return 0 if (ok or not args.check) else 1
 
 

@@ -33,6 +33,15 @@ import jax
 jax.devices()
 
 from benchmarks.common import Csv, write_bench_json  # noqa: E402
+
+#: the artifact's schema (tests/test_bench_schemas.py gates compare.py
+#: keys against this)
+BENCH_KEYS = (
+    "moe_archs", "ep_cells", "ep_max_rel_diff", "ep_commcalls_exact",
+    "ep_swept_per_hw", "bubble_grid_points", "bubble_grid_mismatches",
+    "bubble_gpipe", "bubble_1f1b", "bubble_ratio",
+    "max_bubble_ratio_target",
+)
 from repro.configs import get_arch, list_archs  # noqa: E402
 from repro.core.decomposer import COMPUTE_DTYPE_BYTES, ep_alltoall_bytes  # noqa: E402
 from repro.core.e2e import layer_calls, pp_bubble  # noqa: E402
@@ -172,7 +181,7 @@ def main(argv=None) -> int:
         results = {"error": str(e)}
         failed = True
     if args.json:
-        write_bench_json(args.json, csv, **results, passed=not failed)
+        write_bench_json(args.json, csv, declared=BENCH_KEYS, **results, passed=not failed)
     return 1 if failed else 0
 
 

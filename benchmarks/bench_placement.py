@@ -34,6 +34,18 @@ import time
 import numpy as np
 
 from benchmarks.common import Csv, decode_sweep_trace, get_pipeweave, write_bench_json
+
+#: the artifact's schema (tests/test_bench_schemas.py gates compare.py
+#: keys against this)
+BENCH_KEYS = (
+    "trace_calls", "cost_top1_predicted", "cost_top1_oracle",
+    "cost_top1_match", "oracle_best_rank_in_predicted",
+    "latency_top1_predicted", "latency_top1_oracle", "cost_rank_spearman",
+    "route_s", "best_cost_usd", "admission_hw", "slo_s", "max_tick_s",
+    "slo_met", "decode_ticks", "tick_budget", "admitted_fixed",
+    "admitted_predicted", "admission_decisions", "forced_admits",
+    "overhead_us_per_decision",
+)
 from repro.configs import get_arch
 from repro.core.hardware import get_hw
 from repro.predict import FeatureCache, get_predictor
@@ -215,7 +227,7 @@ def main(argv=None) -> int:
         results = {"error": str(e)}
         failed = True
     if args.json:
-        write_bench_json(args.json, csv, **results, passed=not failed)
+        write_bench_json(args.json, csv, declared=BENCH_KEYS, **results, passed=not failed)
     return 1 if failed else 0
 
 

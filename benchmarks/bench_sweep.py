@@ -25,6 +25,15 @@ import sys
 import time
 
 from benchmarks.common import Csv, decode_sweep_trace, get_pipeweave, write_bench_json
+
+#: the artifact's schema (tests/test_bench_schemas.py gates compare.py
+#: keys against this)
+BENCH_KEYS = (
+    "trace_calls", "n_hw", "single_hw_s", "shared_sweep_s", "naive_sweep_s",
+    "ratio_vs_single", "naive_ratio_vs_single", "max_ratio_target",
+    "shared_vs_naive_rel_diff", "per_hw_err_pct", "mape_seen", "mape_unseen",
+    "single_total_ms",
+)
 from repro.configs import get_arch
 from repro.core.hardware import REGISTRY, get_hw
 from repro.predict import FeatureCache, SweepPredictor, get_predictor
@@ -163,7 +172,7 @@ def main(argv=None) -> int:
         results = {"error": str(e)}
         failed = True
     if args.json:
-        write_bench_json(args.json, csv, **results, passed=not failed)
+        write_bench_json(args.json, csv, declared=BENCH_KEYS, **results, passed=not failed)
     return 1 if failed else 0
 
 

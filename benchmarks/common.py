@@ -128,9 +128,24 @@ def decode_sweep_trace(cfg, B: int = 8, lin: int = 256, steps: int = 48) -> list
     return trace
 
 
-def write_bench_json(path: str, csv: "Csv", **extra):
+def write_bench_json(path: str, csv: "Csv", declared=None, **extra):
     """Dump a benchmark's CSV rows (plus structured extras) as the
-    ``BENCH_*.json`` artifact the CI bench job uploads and gates on."""
+    ``BENCH_*.json`` artifact the CI bench job uploads and gates on.
+
+    ``declared=`` is the writer's schema (its module-level ``BENCH_KEYS``
+    tuple): every declared key must actually be in the payload, so a
+    renamed metric fails the writer loudly instead of silently dropping
+    out of the ``benchmarks.compare`` trajectory gate
+    (``tests/test_bench_schemas.py`` checks the other direction — that
+    every gated key is declared). Smoke-failure payloads (``error=...``)
+    skip the check: they are intentionally partial."""
+    if declared is not None and "error" not in extra:
+        missing = [k for k in declared if k not in extra]
+        if missing:
+            raise KeyError(
+                f"bench artifact {path!r} is missing declared schema keys "
+                f"{missing}; update the writer or its BENCH_KEYS"
+            )
     payload = {
         "rows": [
             {"name": n, "us_per_call": u, "derived": d} for n, u, d in csv.rows

@@ -59,6 +59,11 @@ GATED_METRICS: List[Dict[str, Any]] = [
     # parallelism (ISSUE 5): interleaved-1F1B bubble over GPipe's
     {"file": "BENCH_parallelism.json", "key": "bubble_ratio",
      "direction": "lower", "rel_tol": 0.1},
+    # drift control loop (ISSUE 9): re-routed over frozen p95 on a
+    # step-drifted stream — how much of the drift-induced queueing the
+    # monitor claws back (lower = better; far below 1 when the loop works)
+    {"file": "BENCH_fleet.json", "key": "reroute_p95_ratio",
+     "direction": "lower", "rel_tol": 0.5},
 ]
 
 

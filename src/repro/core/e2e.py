@@ -445,6 +445,7 @@ def simulate_fleet(
     pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,
     pp_interleave: int = 2,
     objective="latency", replicas=1, seed: int = 0, autoscale=None,
+    drift=None, monitor=None,
     hws=None, backend: str = "synperf", router=None,
     **backend_kw,
 ):
@@ -452,7 +453,11 @@ def simulate_fleet(
     with queueing delay: the single-class convenience over
     ``serve.fleet.FleetSimulator`` (mirrors ``place_request``, which this
     extends from isolated pricing to queue-aware p50/p95/p99 latency and
-    utilization). Returns a ``serve.fleet.FleetReport``."""
+    utilization). ``drift=``/``monitor=`` pass through to
+    ``FleetSimulator.replay`` — inject measured-vs-predicted drift and let
+    a ``serve.monitor.ResidualMonitor`` re-route the fleet mid-replay
+    (the report's ``reroutes`` log records each trip). Returns a
+    ``serve.fleet.FleetReport``."""
     from repro.serve.fleet import FleetSimulator, WorkloadClass
 
     wc = WorkloadClass(
@@ -464,7 +469,8 @@ def simulate_fleet(
         wc, router=router, hws=hws, backend=backend, objective=objective,
         replicas=replicas, autoscale=autoscale, **backend_kw,
     )
-    return sim.replay(rate_rps=rate_rps, n_requests=n_requests, seed=seed)
+    return sim.replay(rate_rps=rate_rps, n_requests=n_requests, seed=seed,
+                      drift=drift, monitor=monitor)
 
 
 def request_latency(

@@ -36,6 +36,7 @@ fleet-wide routing pass.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Optional, Union
 
 from repro.core.hardware import TPUSpec
@@ -141,11 +142,56 @@ class SLOCheapestObjective(Objective):
         return f"{self.name}(slo={self.slo_s*1e3:.1f}ms)"
 
 
+class ResidualCorrectedObjective(Objective):
+    """Wrap any objective so it scores *residual-corrected* estimates:
+    before delegating to ``base``, the hardware's estimate is rescaled by
+    its measured-vs-predicted correction factor (``corrections[hw.name]``,
+    default 1.0 — uncorrected).
+
+    The factors come from a ``repro.serve.monitor.ResidualMonitor``'s
+    :meth:`~repro.serve.monitor.ResidualMonitor.corrections` — per-hw EWMA
+    residual ratios of a live fleet. Re-running ``FleetRouter.route_many``
+    under this wrapper is how the drift control loop re-places workloads
+    against what the fleet *measures* instead of what the frozen predictor
+    believed at fit time; ``FleetRouter.route_corrected`` and
+    ``FleetSimulator.replay(monitor=...)`` build it for you."""
+
+    name = "residual_corrected"
+
+    def __init__(self, base: Union[str, Objective],
+                 corrections: dict[str, float]) -> None:
+        self.base = get_objective(base)
+        for hw_name, factor in corrections.items():
+            if not (factor > 0 and math.isfinite(factor)):
+                raise ValueError(
+                    f"correction factor for {hw_name!r} must be finite and "
+                    f"> 0, got {factor}"
+                )
+        self.corrections = dict(corrections)
+
+    def _corrected(self, hw: TPUSpec, est: Estimate) -> Estimate:
+        factor = self.corrections.get(hw.name, 1.0)
+        return est if factor == 1.0 else est.scaled(factor)
+
+    def score(self, hw: TPUSpec, est: Estimate, *, n_tokens: Optional[float] = None) -> float:
+        return self.base.score(hw, self._corrected(hw, est), n_tokens=n_tokens)
+
+    def feasible(self, hw: TPUSpec, est: Estimate) -> bool:
+        return self.base.feasible(hw, self._corrected(hw, est))
+
+    def describe(self) -> str:
+        facts = ", ".join(
+            f"{hw}x{f:.3g}" for hw, f in sorted(self.corrections.items())
+        )
+        return f"{self.name}({self.base.describe()}; {facts or 'no corrections'})"
+
+
 OBJECTIVES = {
     "latency": LatencyObjective,
     "cost": CostObjective,
     "cost_per_token": CostPerTokenObjective,
     "slo_cheapest": SLOCheapestObjective,
+    "residual_corrected": ResidualCorrectedObjective,
 }
 
 

@@ -1,4 +1,7 @@
 """Serving: continuous batching over prefill/decode steps (mesh-native via
 ``engine.mesh=``), trace capture (``serve.trace``) feeding the predict
-layer, prediction-guided fleet placement (``serve.placement``), and
-fleet-scale queueing simulation on top (``serve.fleet``)."""
+layer, prediction-guided fleet placement (``serve.placement``),
+fleet-scale queueing simulation on top (``serve.fleet``), and the drift
+control loop (``serve.monitor``): measured-vs-predicted residual
+monitoring that re-routes the fleet mid-replay when predictions go stale.
+"""

@@ -231,6 +231,11 @@ class ServeEngine(_EngineBase):
         caches = self._runner.grow_cache(caches, L + max_new)
         jax.block_until_ready(logits)
         prefill_s = time.perf_counter() - t0
+        if self.recorder is not None:
+            # stamp the prefill step with its wall-clock: measured-vs-
+            # predicted residuals (serve.monitor) pair this with the
+            # recorded call group
+            self.recorder.mark_measured(prefill_s)
 
         outputs: list[list[int]] = [[] for _ in range(B)]
         t0 = time.perf_counter()
@@ -253,12 +258,16 @@ class ServeEngine(_EngineBase):
                     f"decode@{L + step}", self.cfg, B, 1, L + step + 1,
                     phase="decode", active=still,
                 )
+            t_step = time.perf_counter()
             logits, caches = self._runner.decode(caches, cur, pos)
             key, sub = jax.random.split(key)
             cur = self._sample(logits, batch_reqs, sub)
             for i in range(B):
                 if len(outputs[i]) < batch_reqs[i].max_new:
                     outputs[i].append(int(cur[i]))
+            if self.recorder is not None:
+                # int(cur[i]) above synced the step; this is real wall-clock
+                self.recorder.mark_measured(time.perf_counter() - t_step)
         jax.block_until_ready(cur)
         decode_s = time.perf_counter() - t0
         return [
@@ -497,6 +506,10 @@ class ContinuousBatchingEngine(_EngineBase):
             now = time.perf_counter()
             slot.req, slot.pos, slot.emitted, slot.cur = req, L, [tok], tok
             slot.t_admit, slot.prefill_s, slot.ticks = t0, now - t0, 1
+            if self.recorder is not None:
+                # the admit step's wall-clock == the slot's prefill_s, so
+                # trace residuals reproduce Result-derived ones exactly
+                self.recorder.mark_measured(slot.prefill_s)
 
     def _sample_one(self, logits, req, key) -> int:
         logits = logits[: self.cfg.vocab_size]
@@ -523,6 +536,7 @@ class ContinuousBatchingEngine(_EngineBase):
                 self.cfg, len(self.slots), 1, kv,
                 phase="decode", active=len(active),
             )
+        t_tick = time.perf_counter()
         logits, self.caches = self._runner.decode(self.caches, toks, pos)
         for i in active:
             s = self.slots[i]
@@ -542,6 +556,9 @@ class ContinuousBatchingEngine(_EngineBase):
                     )
                 )
                 self.slots[i] = _Slot()
+        if self.recorder is not None:
+            # the per-slot int() sampling above synced the tick
+            self.recorder.mark_measured(time.perf_counter() - t_tick)
         return True
 
     def run_to_completion(self) -> list[Result]:

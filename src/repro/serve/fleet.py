@@ -45,6 +45,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.e2e import pp_bubble, request_calls
 from repro.predict.sweep import check_prebuilt_exclusive
+from repro.serve.monitor import drift_factor, resolve_drift
 from repro.serve.placement import FleetRouter, Placement
 
 
@@ -195,11 +196,38 @@ class HardwareLoad:
     replica_traj: list  # [(t, n), ...]
 
 
+@dataclasses.dataclass(frozen=True)
+class RerouteEvent:
+    """One mid-replay re-route of the drift control loop: the monitor
+    tripped on request ``index`` (completion time ``t``), the tripping
+    ``(cls, hw)`` key's EWMA residual deviated by ``deviation``, and the
+    fleet was re-routed under the per-hw ``corrections`` (cumulative
+    residual factors) — ``old_assignment`` -> ``new_assignment``."""
+
+    index: int  # arrival-order index of the tripping request
+    t: float  # completion time of the tripping request (sim seconds)
+    cls: str  # workload class whose residual tripped
+    hw: str  # hardware the tripping residual was measured on
+    deviation: float  # |ewma residual - 1| at trip time
+    corrections: dict  # hw -> correction factor applied at this re-route
+    old_assignment: dict  # class -> hw before
+    new_assignment: dict  # class -> hw after
+
+    @property
+    def changed(self) -> bool:
+        """True when the re-route actually moved at least one class."""
+        return self.old_assignment != self.new_assignment
+
+
 @dataclasses.dataclass
 class FleetReport:
     """One replayed stream's fleet metrics. ``latencies`` is the raw
     per-request latency array (arrival to completion, predicted seconds on
-    the assigned hardware) for downstream analysis."""
+    the assigned hardware) for downstream analysis. ``reroutes`` is the
+    drift control loop's re-route log (empty without ``monitor=``, and for
+    any replay where no sustained drift tripped); ``assignment`` is the
+    assignment in effect at the *end* of the replay — it differs from the
+    simulator's frozen one exactly when a logged re-route changed it."""
 
     assignment: dict  # class name -> hw name
     per_hw: dict  # hw name -> HardwareLoad
@@ -210,6 +238,8 @@ class FleetReport:
     latency_p99_s: float
     latency_mean_s: float
     latencies: np.ndarray = dataclasses.field(repr=False, default=None)
+    #: RerouteEvent log, in trip order (drift control loop)
+    reroutes: list = dataclasses.field(default_factory=list)
 
     def table(self) -> str:
         lines = [
@@ -263,21 +293,35 @@ class FleetSimulator:
         self.classes = list(classes)
         check_prebuilt_exclusive("router", router, hws, backend, backend_kw)
         self.router = router if router is not None else FleetRouter(hws, backend, **backend_kw)
+        # routing inputs are kept so the drift control loop can re-run
+        # route_many mid-replay under residual-corrected service times
+        self._objective = objective
+        self._named_calls = {c.name: c.calls() for c in self.classes}
+        self._n_tokens = {c.name: c.n_tokens for c in self.classes}
+        self._scales = {c.name: c.bubble() for c in self.classes}
         #: class name -> Placement (full fleet ranking per class)
         self.placements: dict = self.router.route_many(
-            {c.name: c.calls() for c in self.classes},
+            self._named_calls,
             objective=objective,
-            n_tokens={c.name: c.n_tokens for c in self.classes},
-            scales={c.name: c.bubble() for c in self.classes},
+            n_tokens=self._n_tokens,
+            scales=self._scales,
         )
         #: class name -> assigned hardware (the placement's best entry)
         self.assignment = {name: p.best for name, p in self.placements.items()}
         pools = sorted(set(self.assignment.values()))
+        # pools a re-route newly sends traffic to get this default size
+        self._default_replicas = 1 if isinstance(replicas, dict) else int(replicas)
         self.replicas = (
             dict(replicas) if isinstance(replicas, dict)
             else {hw: int(replicas) for hw in pools}
         )
         self.autoscale = autoscale
+
+    def pool_size(self, hw: str) -> int:
+        """Replica count of one hardware pool (hardware the frozen
+        assignment never used falls back to the scalar ``replicas=``
+        default — a re-route can move traffic onto it)."""
+        return self.replicas.get(hw, self._default_replicas)
 
     def service_s(self, cls_name: str, hw: Optional[str] = None) -> float:
         """Predicted isolated service time of one class on ``hw`` (its
@@ -308,6 +352,8 @@ class FleetSimulator:
         seed: int = 0,
         class_ids=None,
         autoscale: Optional[AutoscalePolicy] = None,
+        drift=None,
+        monitor=None,
     ) -> FleetReport:
         """Replay one request stream and report queue-aware fleet metrics.
 
@@ -315,7 +361,19 @@ class FleetSimulator:
         internally) or ``rate_rps`` + ``n_requests`` for a Poisson stream.
         ``class_ids`` optionally pins each request's workload class (index
         into ``self.classes``); by default classes are drawn by weight
-        under ``seed``."""
+        under ``seed``.
+
+        Drift control loop: ``drift=`` injects measured-vs-predicted drift
+        (a ``serve.monitor.DriftSpec``, a list of them, or a ``{hw:
+        factor}`` step shorthand) by multiplying the *true* service times
+        on the drifted hardware while predictions stay frozen; ``monitor=``
+        (a ``serve.monitor.ResidualMonitor``) observes every completion's
+        measured-vs-predicted residual and, on a sustained trip, re-runs
+        ``route_many`` under residual-corrected service times mid-replay —
+        the fleet re-balances and the report's ``reroutes`` log says when
+        and how. Either argument switches to the event-by-event control
+        path (autoscale is not supported there); with both ``None`` the
+        vectorized frozen-assignment path is bit-identical to before."""
         if arrivals is None:
             if rate_rps is None or n_requests is None:
                 raise ValueError(
@@ -331,11 +389,18 @@ class FleetSimulator:
                 len(self.classes), size=n, p=w / w.sum()
             )
         class_ids = np.asarray(class_ids)
+        policy = self.autoscale if autoscale is None else autoscale
+        if drift is not None or monitor is not None:
+            if policy is not None:
+                raise ValueError(
+                    "drift/monitor replay does not support autoscaling yet; "
+                    "pass autoscale=None (and construct without a policy)"
+                )
+            return self._replay_controlled(arrivals, class_ids, drift, monitor)
         svc_by_class = np.asarray(
             [self.service_s(c.name) for c in self.classes], float
         )
         svc = svc_by_class[class_ids]
-        policy = self.autoscale if autoscale is None else autoscale
 
         latencies = np.empty(n, float)
         per_hw: dict = {}
@@ -378,4 +443,136 @@ class FleetSimulator:
             latency_p99_s=float(np.percentile(latencies, 99)),
             latency_mean_s=float(latencies.mean()),
             latencies=latencies,
+        )
+
+    # ------------------------------------------------------------------
+    # drift control loop
+
+    def _replay_controlled(self, arrivals, class_ids, drift, monitor) -> FleetReport:
+        """Event-by-event replay with drift injection and/or residual
+        monitoring (the production control loop, simulated).
+
+        Per completion: the *measured* service time is the placement row's
+        ``total_s`` times the injected drift factor at arrival time; the
+        *predicted* one is the row's ``total_s`` times the cumulative
+        correction already applied to that hardware (1.0 until a trip).
+        The monitor observes that pair; when it trips, the fleet is
+        re-routed under ``ResidualCorrectedObjective`` with the cumulative
+        per-hw corrections, the event is logged, and the monitor resets —
+        its history measured the *old* baseline. Without drift and with a
+        quiet monitor this path reproduces the vectorized frozen replay
+        exactly (same per-hw FIFO heaps, same arithmetic)."""
+        from repro.predict.objective import (
+            ResidualCorrectedObjective,
+            get_objective,
+        )
+
+        specs = resolve_drift(drift)
+        for hw in specs:
+            known = {r.hw for p in self.placements.values() for r in p.rows}
+            if hw not in known:
+                raise ValueError(
+                    f"drift names hardware {hw!r} that no placement prices; "
+                    f"priceable: {sorted(known)}"
+                )
+        base_obj = get_objective(self._objective)
+        assignment = dict(self.assignment)
+        cum_corr: dict = {}  # hw -> cumulative correction factor applied
+        reroutes: list = []
+        n = len(arrivals)
+        latencies = np.empty(n, float)
+        pools: dict = {}  # hw -> heap of replica next-free times
+        # per-hw accumulators for the report
+        acc: dict = {}  # hw -> dict(lat=[], wait=[], busy=0.0, classes=set)
+
+        for i in range(n):
+            a = float(arrivals[i])
+            c = self.classes[int(class_ids[i])]
+            hw = assignment[c.name]
+            pool = pools.get(hw)
+            if pool is None:
+                pool = [0.0] * self.pool_size(hw)
+                heapq.heapify(pool)
+                pools[hw] = pool
+            base = self.placements[c.name][hw].total_s
+            measured = base * drift_factor(specs, hw, a)
+            predicted = base * cum_corr.get(hw, 1.0)
+            t_free = heapq.heappop(pool)
+            start = a if a >= t_free else t_free
+            done = start + measured
+            heapq.heappush(pool, done)
+            latencies[i] = done - a
+            st = acc.get(hw)
+            if st is None:
+                st = acc[hw] = {"lat": [], "wait": [], "busy": 0.0,
+                                "classes": set()}
+            st["lat"].append(done - a)
+            st["wait"].append(start - a)
+            st["busy"] += measured
+            st["classes"].add(c.name)
+            if monitor is None:
+                continue
+            event = monitor.observe(c.name, hw, measured, predicted, t=done)
+            if event is None:
+                continue
+            # sustained drift: fold the monitor's per-hw corrections into
+            # the cumulative ones (they are residuals *of the corrected
+            # predictions*, so composition is multiplicative), re-route,
+            # and reset the monitor against the new baseline
+            step_corr = monitor.corrections()
+            for h, f in step_corr.items():
+                cum_corr[h] = cum_corr.get(h, 1.0) * f
+            corrected = self.router.route_many(
+                self._named_calls,
+                objective=ResidualCorrectedObjective(base_obj, dict(cum_corr)),
+                n_tokens=self._n_tokens,
+                scales=self._scales,
+            )
+            new_assignment = {name: p.best for name, p in corrected.items()}
+            reroutes.append(
+                RerouteEvent(
+                    index=i, t=done, cls=event.cls, hw=event.hw,
+                    deviation=event.deviation, corrections=dict(step_corr),
+                    old_assignment=dict(assignment),
+                    new_assignment=dict(new_assignment),
+                )
+            )
+            assignment = new_assignment
+            monitor.reset()
+
+        per_hw: dict = {}
+        horizon = 0.0
+        for hw, st in acc.items():
+            lat = np.asarray(st["lat"], float)
+            wait = np.asarray(st["wait"], float)
+            size = self.pool_size(hw)
+            hw_last = float(max(pools[hw]))  # last completion on this pool
+            horizon = max(horizon, hw_last)
+            capacity = size * hw_last
+            per_hw[hw] = HardwareLoad(
+                hw=hw,
+                classes=sorted(st["classes"]),
+                n_requests=len(lat),
+                replicas=size,
+                final_replicas=size,
+                latency_p50_s=float(np.percentile(lat, 50)),
+                latency_p95_s=float(np.percentile(lat, 95)),
+                latency_p99_s=float(np.percentile(lat, 99)),
+                latency_mean_s=float(lat.mean()),
+                wait_mean_s=float(wait.mean()),
+                utilization=float(st["busy"] / capacity) if capacity > 0 else 0.0,
+                busy_s=float(st["busy"]),
+                replica_traj=[(0.0, size)],
+            )
+        return FleetReport(
+            assignment=assignment,
+            per_hw=per_hw,
+            n_requests=n,
+            horizon_s=horizon,
+            latency_p50_s=float(np.percentile(latencies, 50)),
+            latency_p95_s=float(np.percentile(latencies, 95)),
+            latency_p99_s=float(np.percentile(latencies, 99)),
+            latency_mean_s=float(latencies.mean()),
+            latencies=latencies,
+            reroutes=reroutes,
         )

@@ -40,6 +40,7 @@ from repro.predict.api import Estimate
 from repro.predict.batching import group_calls
 from repro.predict.objective import (
     Objective,
+    ResidualCorrectedObjective,
     UnpricedHardwareError,
     get_objective,
     trace_cost_usd,
@@ -295,6 +296,30 @@ class FleetRouter:
             )
             for name, calls in named_calls.items()
         }
+
+    def route_corrected(
+        self,
+        named_calls: dict,
+        corrections: dict,
+        *,
+        objective=None,
+        n_tokens: Optional[dict] = None,
+        scales: Optional[dict] = None,
+    ) -> dict:
+        """``route_many`` against *residual-corrected* service times: every
+        hardware's estimate is rescaled by its measured-vs-predicted
+        correction factor (``{hw: factor}``, absent = 1.0 — typically a
+        ``repro.serve.monitor.ResidualMonitor``'s ``corrections()``) before
+        objective scoring. This is the mid-replay re-route step of the
+        drift control loop: the ranking reflects what the fleet measures,
+        not what the frozen fit believed."""
+        obj = self.objective if objective is None else get_objective(objective)
+        return self.route_many(
+            named_calls,
+            objective=ResidualCorrectedObjective(obj, dict(corrections)),
+            n_tokens=n_tokens,
+            scales=scales,
+        )
 
     def route_trace(self, recorder, *, objective=None, scale: float = 1.0) -> Placement:
         """Route a live ``TraceRecorder``: the recorded call groups with

@@ -56,6 +56,40 @@ from repro.core.e2e import model_calls
 PHASES = ("prefill", "decode", "other")
 
 
+def step_calls(
+    cfg: ArchConfig,
+    B: int,
+    qlen: int,
+    kvlen: int,
+    tp: int = 1,
+    pp: int = 1,
+    *,
+    pp_schedule: str = "gpipe",
+    pp_interleave: int = 2,
+    tuned: Optional[dict] = None,
+) -> list:
+    """Lower one engine step's shapes into the call sequence the recorder
+    would record for them: the full ``model_calls`` lowering plus, at
+    ``pp > 1``, the schedule's stage-boundary activation traffic.
+
+    This is the single lowering both :meth:`TraceRecorder.record_step` and
+    the residual monitor's re-lowering path
+    (``repro.serve.monitor.step_predicted_s``) use, which is what makes
+    the round-trip exact: re-lowering a recorded :class:`StepMeta`'s
+    shapes yields the same calls — hence the same prediction — as the
+    group recorded live."""
+    calls = model_calls(cfg, B, qlen, kvlen, tp, tuned)
+    if pp > 1:
+        from repro.core.e2e import pp_boundary_hops
+        from repro.predict.api import CommCall
+
+        boundary = pp_boundary_hops(pp, pp_schedule, pp_interleave) * (
+            B * cfg.d_model * 2.0
+        )
+        calls.append(("pp_boundary", 1, [CommCall("p2p", boundary * qlen, 2)]))
+    return calls
+
+
 @dataclasses.dataclass(frozen=True)
 class StepMeta:
     """Shape + scheduling metadata of one recorded engine step.
@@ -79,6 +113,11 @@ class StepMeta:
     #: recorder is bound to a mesh-native engine, else the declared ones
     tp: int = 1
     pp: int = 1
+    #: wall-clock seconds the step actually took, stamped by the engine
+    #: via :meth:`TraceRecorder.mark_measured` (0.0 = not measured).
+    #: Measured steps are the residual monitor's observations
+    #: (``repro.serve.monitor.trace_residuals``).
+    measured_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -179,15 +218,9 @@ class TraceRecorder:
             raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
         tp = self.resolved_tp if tp is None else tp
         pp = self.resolved_pp
-        calls = model_calls(cfg, B, qlen, kvlen, tp, self.tuned)
-        if pp > 1:
-            from repro.core.e2e import pp_boundary_hops
-            from repro.predict.api import CommCall
-
-            boundary = pp_boundary_hops(
-                pp, self.pp_schedule, self.pp_interleave
-            ) * (B * cfg.d_model * 2.0)
-            calls.append(("pp_boundary", 1, [CommCall("p2p", boundary * qlen, 2)]))
+        calls = step_calls(cfg, B, qlen, kvlen, tp, pp,
+                           pp_schedule=self.pp_schedule,
+                           pp_interleave=self.pp_interleave, tuned=self.tuned)
         self.steps.append((label, 1.0, calls))
         self.meta.append(
             StepMeta(label, phase, B, qlen, kvlen,
@@ -203,6 +236,18 @@ class TraceRecorder:
             raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
         self.steps.append((label, 1.0, calls))
         self.meta.append(StepMeta(label, phase, 0, 0, 0, 0))
+
+    def mark_measured(self, seconds: float) -> None:
+        """Stamp the most recently recorded step with its measured
+        wall-clock (engines call this right after timing the step; the
+        pairing of measured seconds with the step's predicted calls is
+        what the residual monitor consumes). No-op refinements are
+        rejected: there must be a step to stamp."""
+        if not self.meta:
+            raise RuntimeError("mark_measured with no recorded step")
+        if not seconds >= 0:
+            raise ValueError(f"measured seconds must be >= 0, got {seconds}")
+        self.meta[-1] = dataclasses.replace(self.meta[-1], measured_s=float(seconds))
 
     def calls(self) -> list:
         """The recorded trace as one nested call sequence — feed directly

@@ -1,0 +1,98 @@
+"""Bench artifact schemas (ISSUE 9): every metric the perf-trajectory
+gate (``benchmarks.compare``) reads must be *declared* by the writer that
+produces it (the module's ``BENCH_KEYS``), and ``write_bench_json``
+must refuse payloads that silently drop a declared key — so renaming a
+metric breaks the writer loudly instead of un-gating the trajectory."""
+import importlib
+import json
+import os
+
+import pytest
+
+from benchmarks.common import Csv, write_bench_json
+from benchmarks.compare import GATED_METRICS
+
+BASELINE = os.path.join(
+    os.path.dirname(__file__), "..", "results", "bench_baseline", "metrics.json"
+)
+
+
+def _writer_module(artifact: str):
+    """``BENCH_fleet.json`` -> ``benchmarks.bench_fleet``."""
+    assert artifact.startswith("BENCH_") and artifact.endswith(".json")
+    name = artifact[len("BENCH_"):-len(".json")]
+    return importlib.import_module(f"benchmarks.bench_{name}")
+
+
+def test_every_gated_metric_is_declared_by_its_writer():
+    for m in GATED_METRICS:
+        mod = _writer_module(m["file"])
+        keys = getattr(mod, "BENCH_KEYS", None)
+        assert keys is not None, (
+            f"{mod.__name__} writes gated artifact {m['file']} but declares "
+            "no BENCH_KEYS schema"
+        )
+        assert m["key"] in keys, (
+            f"compare.py gates {m['file']}::{m['key']} but {mod.__name__}."
+            f"BENCH_KEYS does not declare it — the gate would silently SKIP"
+        )
+
+
+def test_declared_schemas_have_no_duplicates():
+    for artifact in {m["file"] for m in GATED_METRICS}:
+        keys = _writer_module(artifact).BENCH_KEYS
+        assert len(keys) == len(set(keys)), f"duplicate keys in {artifact}"
+
+
+def test_gate_directions_and_tolerances_are_sane():
+    for m in GATED_METRICS:
+        assert m["direction"] in ("higher", "lower")
+        assert 0.0 < m["rel_tol"] < 1.0
+
+
+def test_baseline_snapshot_matches_gated_metrics():
+    # the committed snapshot and GATED_METRICS must agree entry for entry:
+    # a gate without a baseline never fires, a baseline without a gate is
+    # dead weight that --write-baseline would drop
+    with open(BASELINE) as f:
+        baseline = json.load(f)["metrics"]
+    gated = {f"{m['file']}::{m['key']}": m for m in GATED_METRICS}
+    assert set(baseline) == set(gated)
+    for name, entry in baseline.items():
+        m = gated[name]
+        assert entry["file"] == m["file"] and entry["key"] == m["key"]
+        assert entry["direction"] == m["direction"]
+        assert entry["rel_tol"] == m["rel_tol"]
+        assert isinstance(entry["value"], (int, float))
+
+
+# ----------------------------------------------------------------------
+# write_bench_json declared-schema validation
+# ----------------------------------------------------------------------
+
+
+def test_write_bench_json_rejects_missing_declared_keys(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    with pytest.raises(KeyError, match="missing declared schema keys"):
+        write_bench_json(path, Csv(), declared=("a", "b"), a=1)
+    assert not os.path.exists(path)
+
+
+def test_write_bench_json_accepts_complete_payload(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    csv = Csv()
+    csv.add("x/metric", 1.0, "derived")
+    write_bench_json(path, csv, declared=("a", "b"), a=1, b=2.5, extra="ok")
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["a"] == 1 and payload["b"] == 2.5 and payload["extra"] == "ok"
+    assert payload["rows"][0]["name"] == "x/metric"
+
+
+def test_write_bench_json_error_payload_skips_validation(tmp_path):
+    # smoke-failure artifacts are intentionally partial
+    path = str(tmp_path / "BENCH_x.json")
+    write_bench_json(path, Csv(), declared=("a", "b"), error="boom",
+                     passed=False)
+    with open(path) as f:
+        assert json.load(f)["error"] == "boom"

@@ -1,0 +1,136 @@
+"""Property suite for the drift control loop (ISSUE 9, hypothesis; falls
+back to tests/_hypothesis_stub.py when the real package is absent):
+
+  * an undrifted monitored replay is bit-identical to the frozen
+    vectorized path and trips zero re-routes (false-positive bound);
+  * an injected step drift well over threshold trips exactly one
+    sustained re-route — after correction the residual returns to 1;
+  * on a drifted single-class stream, the re-routed replay's p95 never
+    exceeds the frozen assignment's;
+  * conservation (every admitted request completes, once) and
+    utilization <= 1 hold across random class mixes, seeds, loads, and
+    drift factors on the event-by-event controlled path.
+"""
+from functools import lru_cache
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.serve.fleet import FleetSimulator, WorkloadClass
+from repro.serve.monitor import DriftSpec, ResidualMonitor
+
+HWS = ["tpu-v5e", "tpu-v6e"]
+
+#: (name, lin, lout, weight) per class — hashable so sims memoize per mix
+MIXES = (
+    (("chat", 256, 32, 3.0), ("bulk", 1024, 64, 1.0)),
+    (("solo", 512, 48, 1.0),),
+    (("a", 128, 16, 1.0), ("b", 384, 32, 2.0), ("c", 768, 8, 1.0)),
+)
+SINGLE = MIXES[1]
+N = 400  # requests per replayed stream (event-by-event path: keep small)
+
+
+@lru_cache(maxsize=None)
+def _cfg():
+    return get_arch("qwen3-0.6b").smoke()
+
+
+@lru_cache(maxsize=None)
+def _sim(mix):
+    # module-level cache instead of pytest fixtures: @given hides the test
+    # signature (both real hypothesis and the stub), so fixtures can't mix
+    classes = [
+        WorkloadClass(name, _cfg(), B=1, lin=lin, lout=lout, weight=w)
+        for name, lin, lout, w in mix
+    ]
+    return FleetSimulator(classes, hws=HWS, backend="oracle", replicas=2)
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    mix=st.sampled_from(MIXES),
+    seed=st.integers(0, 3),
+    frac=st.floats(min_value=0.3, max_value=0.7),
+)
+def test_no_drift_means_zero_reroutes_and_exact_replay(mix, seed, frac):
+    sim = _sim(mix)
+    rate = frac * sim.saturation_rate_rps()
+    frozen = sim.replay(rate_rps=rate, n_requests=N, seed=seed)
+    ctl = sim.replay(rate_rps=rate, n_requests=N, seed=seed,
+                     monitor=ResidualMonitor())
+    assert ctl.reroutes == []
+    assert ctl.assignment == sim.assignment
+    assert np.array_equal(frozen.latencies, ctl.latencies)
+    assert set(ctl.per_hw) == set(frozen.per_hw)
+    for hw, load in ctl.per_hw.items():
+        assert load.n_requests == frozen.per_hw[hw].n_requests
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    mix=st.sampled_from(MIXES),
+    seed=st.integers(0, 3),
+    factor=st.floats(min_value=1.6, max_value=4.0),
+)
+def test_step_drift_trips_exactly_one_reroute(mix, seed, factor):
+    # deviation factor-1 >= 0.6 is far over the 0.25 threshold, so the
+    # monitor must trip; corrected predictions then bring the residual
+    # back to ~1, so it must trip exactly once
+    sim = _sim(mix)
+    drift_hw = sim.assignment[mix[0][0]]
+    report = sim.replay(
+        rate_rps=0.5 * sim.saturation_rate_rps(), n_requests=N, seed=seed,
+        drift=DriftSpec(hw=drift_hw, factor=factor),
+        monitor=ResidualMonitor(),
+    )
+    assert len(report.reroutes) == 1
+    ev = report.reroutes[0]
+    assert ev.hw == drift_hw
+    assert ev.deviation >= 0.25
+    assert ev.corrections[drift_hw] > 1.0
+    assert report.assignment == ev.new_assignment
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 5), factor=st.floats(min_value=2.0, max_value=4.0))
+def test_rerouted_p95_never_exceeds_frozen_on_drifted_stream(seed, factor):
+    sim = _sim(SINGLE)
+    rate = 0.5 * sim.saturation_rate_rps()
+    drift = DriftSpec(hw=sim.assignment["solo"], factor=factor)
+    frozen = sim.replay(rate_rps=rate, n_requests=N, seed=seed, drift=drift)
+    routed = sim.replay(rate_rps=rate, n_requests=N, seed=seed, drift=drift,
+                        monitor=ResidualMonitor())
+    assert len(routed.reroutes) == 1
+    # either the corrected route moved the class off the drifted pool
+    # (strictly faster service from an empty pool) or it stayed put (the
+    # replays coincide) — in both cases p95 cannot regress
+    assert routed.latency_p95_s <= frozen.latency_p95_s * (1 + 1e-12)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    mix=st.sampled_from(MIXES),
+    seed=st.integers(0, 3),
+    factor=st.floats(min_value=1.0, max_value=3.0),
+)
+def test_conservation_and_utilization(mix, seed, factor):
+    sim = _sim(mix)
+    report = sim.replay(
+        rate_rps=0.5 * sim.saturation_rate_rps(), n_requests=N, seed=seed,
+        drift={sim.assignment[mix[0][0]]: factor},
+        monitor=ResidualMonitor(),
+    )
+    # every admitted request completes exactly once, on exactly one pool
+    assert report.n_requests == N
+    assert len(report.latencies) == N
+    assert sum(l.n_requests for l in report.per_hw.values()) == N
+    assert np.all(report.latencies > 0)
+    assert np.isfinite(report.latencies).all()
+    for load in report.per_hw.values():
+        assert 0.0 <= load.utilization <= 1.0 + 1e-9
+        assert load.busy_s >= 0.0
+    assert report.horizon_s >= float(report.latencies[0])
+    classes = {c for l in report.per_hw.values() for c in l.classes}
+    assert classes == {m[0] for m in mix}

@@ -1,0 +1,318 @@
+"""Residual-monitor math regressions (ISSUE 9): EWMA window edge cases
+(window longer than the stream, single-sample classes, all-identical
+residuals), the threshold exactly at the boundary, streak/sustain
+behavior, drift-injection specs, and a golden re-route log on a fixed
+seed through ``FleetSimulator.replay``."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.serve.fleet import FleetSimulator, WorkloadClass
+from repro.serve.monitor import (
+    DriftSpec,
+    ResidualMonitor,
+    drift_factor,
+    resolve_drift,
+)
+
+HWS = ["tpu-v5e", "tpu-v6e"]
+
+
+# ----------------------------------------------------------------------
+# EWMA edge cases
+# ----------------------------------------------------------------------
+
+
+def test_all_identical_residuals_ewma_is_exact():
+    # seeded with the first sample, an all-identical stream's EWMA is that
+    # value *exactly* — no asymptotic convergence, bit-for-bit
+    mon = ResidualMonitor(window=64)
+    for _ in range(10):
+        mon.observe("c", "h", measured_s=2.5, predicted_s=1.0)
+    assert mon.ewma("c", "h") == 2.5
+    assert mon.deviation("c", "h") == 1.5
+
+
+def test_window_longer_than_stream():
+    mon = ResidualMonitor(window=1000)
+    for _ in range(7):
+        mon.observe("c", "h", measured_s=3.0, predicted_s=1.0)
+    assert mon.n_samples("c", "h") == 7
+    assert len(mon.window_samples("c", "h")) == 7  # deque never filled
+    assert mon.ewma("c", "h") == 3.0
+
+
+def test_single_sample_class_never_trips():
+    # min_samples (defaults to sustain) keeps a one-observation class from
+    # tripping on its first residual, however large
+    mon = ResidualMonitor()
+    ev = mon.observe("once", "h", measured_s=100.0, predicted_s=1.0)
+    assert ev is None
+    assert mon.events == []
+    assert mon.n_samples("once", "h") == 1
+
+
+def test_unseen_key_accessors():
+    mon = ResidualMonitor()
+    assert mon.ewma("x", "y") is None
+    assert mon.deviation("x", "y") is None
+    assert mon.n_samples("x", "y") == 0
+    assert mon.window_samples("x", "y") == []
+    assert mon.keys() == []
+    assert mon.corrections() == {}
+
+
+def test_window_deque_keeps_last_n():
+    mon = ResidualMonitor(window=3, threshold=10.0)  # threshold: never trip
+    for r in (1.0, 2.0, 3.0, 4.0, 5.0):
+        mon.observe("c", "h", measured_s=r, predicted_s=1.0)
+    assert mon.window_samples("c", "h") == [3.0, 4.0, 5.0]
+    assert mon.n_samples("c", "h") == 5
+
+
+# ----------------------------------------------------------------------
+# threshold / sustain behavior
+# ----------------------------------------------------------------------
+
+
+def test_threshold_exactly_at_boundary_trips():
+    # the comparison is >=: a residual pinned exactly at 1 + threshold
+    # counts as over-threshold (0.25 is exact in binary floats)
+    mon = ResidualMonitor(window=8, threshold=0.25, sustain=3, min_samples=1)
+    events = [
+        mon.observe("c", "h", measured_s=1.25, predicted_s=1.0)
+        for _ in range(3)
+    ]
+    assert events[0] is None and events[1] is None
+    assert events[2] is not None
+    assert events[2].deviation == 0.25
+    assert mon.events == [events[2]]
+
+
+def test_just_below_threshold_never_trips():
+    mon = ResidualMonitor(window=8, threshold=0.25, sustain=3, min_samples=1)
+    for _ in range(50):
+        assert mon.observe("c", "h", 1.2499, 1.0) is None
+    assert mon.events == []
+
+
+def test_one_under_threshold_observation_resets_streak():
+    # window=1 makes the EWMA the last raw ratio exactly (alpha = 1), so
+    # the streak is driven by the raw sequence: every third observation
+    # dips under threshold and the trip never completes
+    mon = ResidualMonitor(window=1, threshold=0.5, sustain=3, min_samples=1)
+    for _ in range(6):
+        assert mon.observe("c", "h", 2.0, 1.0) is None
+        assert mon.observe("c", "h", 2.0, 1.0) is None
+        assert mon.observe("c", "h", 1.0, 1.0) is None
+    # three consecutive over-threshold observations then trip
+    assert mon.observe("c", "h", 2.0, 1.0) is None
+    assert mon.observe("c", "h", 2.0, 1.0) is None
+    assert mon.observe("c", "h", 2.0, 1.0) is not None
+
+
+def test_transient_spike_never_trips_defaults():
+    # one 5x outlier in a calm stream moves the EWMA by alpha*(5-1) ~ 0.12
+    # < threshold 0.25 — the sustained-residual design goal
+    mon = ResidualMonitor()
+    for _ in range(100):
+        mon.observe("c", "h", 1.0, 1.0)
+    mon.observe("c", "h", 5.0, 1.0)
+    for _ in range(100):
+        mon.observe("c", "h", 1.0, 1.0)
+    assert mon.events == []
+
+
+def test_speedup_drift_trips_too():
+    # |ewma - 1| is two-sided: a 2x *speedup* (ratio 0.5) is drift as well
+    mon = ResidualMonitor()  # sustain=8, min_samples=8 -> trips at n=15
+    events = [mon.observe("c", "h", 0.5, 1.0) for _ in range(15)]
+    assert events[-1] is not None
+    assert events[-1].deviation == 0.5
+    assert events[-1].n_samples == 15
+    assert all(e is None for e in events[:-1])
+
+
+def test_trip_repeats_without_reset():
+    # uncorrected sustained drift re-trips every `sustain` observations
+    mon = ResidualMonitor(window=4, threshold=0.5, sustain=3, min_samples=1)
+    events = [mon.observe("c", "h", 2.0, 1.0) for _ in range(9)]
+    assert [e is not None for e in events] == [False, False, True] * 3
+    assert len(mon.events) == 3
+
+
+def test_corrections_window_count_weighted_mean():
+    mon = ResidualMonitor(window=64, threshold=10.0)
+    for _ in range(3):
+        mon.observe("a", "hw0", 2.0, 1.0)
+    mon.observe("b", "hw0", 1.0, 1.0)
+    for _ in range(2):
+        mon.observe("c", "hw1", 3.0, 1.0)
+    corr = mon.corrections()
+    assert corr["hw0"] == pytest.approx((2.0 * 3 + 1.0 * 1) / 4)
+    assert corr["hw1"] == 3.0
+    assert set(corr) == {"hw0", "hw1"}
+
+
+def test_reset_drops_state_keeps_events():
+    mon = ResidualMonitor(window=1, threshold=0.5, sustain=1, min_samples=1)
+    assert mon.observe("c", "h", 2.0, 1.0) is not None
+    assert mon.n_observed == 1
+    mon.reset()
+    assert mon.keys() == []
+    assert mon.n_observed == 0
+    assert len(mon.events) == 1  # trip history survives reset
+    mon.reset(clear_events=True)
+    assert mon.events == []
+
+
+def test_observe_rejects_nonpositive_and_nonfinite():
+    mon = ResidualMonitor()
+    for bad in (0.0, -1.0, float("inf"), float("nan")):
+        with pytest.raises(ValueError):
+            mon.observe("c", "h", bad, 1.0)
+        with pytest.raises(ValueError):
+            mon.observe("c", "h", 1.0, bad)
+    assert mon.n_observed == 0
+
+
+def test_monitor_parameter_validation():
+    with pytest.raises(ValueError):
+        ResidualMonitor(window=0)
+    with pytest.raises(ValueError):
+        ResidualMonitor(threshold=0.0)
+    with pytest.raises(ValueError):
+        ResidualMonitor(threshold=float("nan"))
+    with pytest.raises(ValueError):
+        ResidualMonitor(sustain=0)
+
+
+# ----------------------------------------------------------------------
+# drift injection
+# ----------------------------------------------------------------------
+
+
+def test_drift_step_factor_at():
+    d = DriftSpec(hw="h", factor=3.0, t_start=10.0)
+    assert d.factor_at(9.999) == 1.0
+    assert d.factor_at(10.0) == 3.0
+    assert d.factor_at(1e9) == 3.0
+
+
+def test_drift_ramp_factor_at():
+    d = DriftSpec(hw="h", factor=3.0, t_start=10.0, mode="ramp", t_end=20.0)
+    assert d.factor_at(5.0) == 1.0
+    assert d.factor_at(10.0) == 1.0  # ramp starts *from* 1.0
+    assert d.factor_at(15.0) == pytest.approx(2.0)
+    assert d.factor_at(20.0) == 3.0
+    assert d.factor_at(25.0) == 3.0  # holds after t_end
+
+
+def test_drift_spec_validation():
+    with pytest.raises(ValueError):
+        DriftSpec(hw="h", factor=0.0)
+    with pytest.raises(ValueError):
+        DriftSpec(hw="h", factor=float("inf"))
+    with pytest.raises(ValueError):
+        DriftSpec(hw="h", factor=2.0, mode="pulse")
+    with pytest.raises(ValueError):
+        DriftSpec(hw="h", factor=2.0, mode="ramp")  # no t_end
+    with pytest.raises(ValueError):
+        DriftSpec(hw="h", factor=2.0, mode="ramp", t_start=5.0, t_end=5.0)
+
+
+def test_resolve_drift_shorthands():
+    assert resolve_drift(None) == {}
+    spec = DriftSpec(hw="h", factor=2.0)
+    assert resolve_drift(spec) == {"h": [spec]}
+    out = resolve_drift({"a": 2.0, "b": 0.5})
+    assert set(out) == {"a", "b"}
+    assert out["a"][0].factor == 2.0 and out["a"][0].mode == "step"
+    assert out["b"][0].factor == 0.5
+    with pytest.raises(TypeError):
+        resolve_drift(["not a spec"])
+
+
+def test_drift_factor_composes_multiplicatively():
+    specs = resolve_drift(
+        [DriftSpec(hw="h", factor=2.0), DriftSpec(hw="h", factor=3.0, t_start=10.0)]
+    )
+    assert drift_factor(specs, "h", 0.0) == 2.0
+    assert drift_factor(specs, "h", 10.0) == 6.0
+    assert drift_factor(specs, "other", 10.0) == 1.0
+
+
+# ----------------------------------------------------------------------
+# golden re-route log through the fleet replay (fixed seed)
+# ----------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sim():
+    cfg = get_arch("qwen3-0.6b").smoke()
+    chat = WorkloadClass("chat", cfg, B=1, lin=256, lout=32, weight=3.0)
+    bulk = WorkloadClass("bulk", cfg, B=1, lin=1024, lout=64, weight=1.0)
+    return FleetSimulator([chat, bulk], hws=HWS, backend="oracle", replicas=2)
+
+
+def test_golden_reroute_log(sim):
+    # oracle backend, fixed seed, 3x step drift on the assigned hardware:
+    # the whole control loop is deterministic, so the log is pinnable
+    assert sim.assignment == {"chat": "tpu-v6e", "bulk": "tpu-v6e"}
+    rate = 0.5 * sim.saturation_rate_rps()
+    mon = ResidualMonitor()
+    report = sim.replay(
+        rate_rps=rate, n_requests=4000, seed=7,
+        drift=DriftSpec(hw="tpu-v6e", factor=3.0), monitor=mon,
+    )
+    assert len(report.reroutes) == 1
+    ev = report.reroutes[0]
+    # chat (weight 3) reaches min_samples + sustain = 15 observations
+    # first, on the 19th request of the stream
+    assert ev.index == 18
+    assert ev.cls == "chat"
+    assert ev.hw == "tpu-v6e"
+    # all residual ratios are identically 3.0, so the EWMA is *exactly* 3
+    assert ev.deviation == 2.0
+    assert set(ev.corrections) == {"tpu-v6e"}
+    assert ev.corrections["tpu-v6e"] == pytest.approx(3.0, rel=1e-12)
+    assert ev.old_assignment == {"chat": "tpu-v6e", "bulk": "tpu-v6e"}
+    assert ev.new_assignment == {"chat": "tpu-v5e", "bulk": "tpu-v5e"}
+    assert ev.changed
+    # the report carries the assignment in effect at the end of the replay
+    assert report.assignment == ev.new_assignment
+    assert mon.events[0].deviation == 2.0
+
+
+def test_golden_reroute_log_is_reproducible(sim):
+    kw = dict(rate_rps=0.5 * sim.saturation_rate_rps(), n_requests=4000,
+              seed=7, drift=DriftSpec(hw="tpu-v6e", factor=3.0))
+    r1 = sim.replay(monitor=ResidualMonitor(), **kw)
+    r2 = sim.replay(monitor=ResidualMonitor(), **kw)
+    assert r1.reroutes == r2.reroutes  # frozen dataclass equality
+    assert np.array_equal(r1.latencies, r2.latencies)
+
+
+def test_monitored_undrifted_replay_is_bit_identical(sim):
+    rate = 0.5 * sim.saturation_rate_rps()
+    frozen = sim.replay(rate_rps=rate, n_requests=1500, seed=7)
+    ctl = sim.replay(rate_rps=rate, n_requests=1500, seed=7,
+                     monitor=ResidualMonitor())
+    assert ctl.reroutes == []
+    assert ctl.assignment == frozen.assignment
+    assert np.array_equal(frozen.latencies, ctl.latencies)
+
+
+def test_drift_rejects_unknown_hardware(sim):
+    with pytest.raises(ValueError, match="no placement prices"):
+        sim.replay(rate_rps=1.0, n_requests=10, seed=0,
+                   drift={"tpu-v99": 2.0})
+
+
+def test_drift_replay_rejects_autoscale(sim):
+    from repro.serve.fleet import AutoscalePolicy
+
+    with pytest.raises(ValueError, match="autoscal"):
+        sim.replay(rate_rps=1.0, n_requests=10, seed=0,
+                   drift={"tpu-v6e": 2.0},
+                   autoscale=AutoscalePolicy(window_s=1.0))
