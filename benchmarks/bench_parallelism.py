@@ -16,6 +16,13 @@ Three standing criteria (asserted under ``--smoke``, the CI gate):
 3. **1F1B margin** — at the production point (S=4, M=2S, V=2) the
    interleaved bubble fraction must stay <= ``MAX_BUBBLE_RATIO`` x
    GPipe's (analytically (S-1)/(V*M+S-1) vs (S-1)/(M+S-1) ~ 0.58x).
+4. **ZB-H1 margin** (ISSUE 10) — at the same point the zero-bubble
+   schedule's bubble must stay <= ``MAX_ZB_RATIO`` x 1F1B's
+   (analytically r/(3VM+r... exactly 3/51 vs 3/19 = 19/51 ~ 0.37x),
+   with the zb-h1 grid folded into criterion 2's exactness sweep.
+5. **Overlap bound** (ISSUE 10) — the overlap-priced estimate of a
+   >=12k-call decode trace lands in ``[kernel-only, additive]`` and
+   actually engages (strictly below additive when comm exists).
 
 Standalone: ``python -m benchmarks.bench_parallelism [--smoke] [--json
 PATH]`` (non-zero exit when a smoke criterion fails — the CI gate).
@@ -41,6 +48,8 @@ BENCH_KEYS = (
     "ep_swept_per_hw", "bubble_grid_points", "bubble_grid_mismatches",
     "bubble_gpipe", "bubble_1f1b", "bubble_ratio",
     "max_bubble_ratio_target",
+    "bubble_zb_h1", "zb_ratio", "max_zb_ratio_target",
+    "overlap_trace_calls", "overlap_total_ratio", "overlap_bounded",
 )
 from repro.configs import get_arch, list_archs  # noqa: E402
 from repro.core.decomposer import COMPUTE_DTYPE_BYTES, ep_alltoall_bytes  # noqa: E402
@@ -48,10 +57,13 @@ from repro.core.e2e import layer_calls, pp_bubble  # noqa: E402
 from repro.core.hardware import get_hw  # noqa: E402
 from repro.dist.pipeline import bubble_fraction, schedule_ticks, simulate_schedule  # noqa: E402
 from repro.launch.dryrun import count_ep_alltoall_bytes  # noqa: E402
-from repro.predict import CommCall, SweepPredictor  # noqa: E402
+from repro.predict import CommCall, SweepPredictor, get_predictor  # noqa: E402
 
 #: 1F1B bubble must be at most this fraction of GPipe's at the gate point
 MAX_BUBBLE_RATIO = 0.65
+#: ZB-H1 bubble must be at most this fraction of 1F1B's at the same point
+#: (analytically (3/51)/(3/19) = 19/51 ~ 0.373)
+MAX_ZB_RATIO = 0.4
 GATE_S, GATE_V = 4, 2
 
 EP_SHAPES = ((32, 2048, False), (4, 128, False), (128, 1, False), (8, 512, True))
@@ -112,9 +124,10 @@ def run(csv: Csv, smoke: bool = False) -> dict:
                 mismatches += 1
             n_grid += 1
             for V in (1, 2, 3, 4):
-                if simulate_schedule(S, M, "1f1b", V) != schedule_ticks(S, M, "1f1b", V):
-                    mismatches += 1
-                n_grid += 1
+                for sched in ("1f1b", "zb-h1"):
+                    if simulate_schedule(S, M, sched, V) != schedule_ticks(S, M, sched, V):
+                        mismatches += 1
+                    n_grid += 1
     grid_s = time.perf_counter() - t0
     csv.add("parallelism/bubble_grid", grid_s * 1e6 / n_grid,
             f"{n_grid} (S,M,V) schedules, {mismatches} sim-vs-closed-form "
@@ -131,7 +144,32 @@ def run(csv: Csv, smoke: bool = False) -> dict:
             f"(target <={MAX_BUBBLE_RATIO}x)")
     csv.add("parallelism/pp_surcharge", 0.0,
             f"gpipe {pp_bubble(GATE_S, M):.4f}x vs 1f1b "
-            f"{pp_bubble(GATE_S, M, '1f1b', GATE_V):.4f}x")
+            f"{pp_bubble(GATE_S, M, '1f1b', GATE_V):.4f}x vs zb-h1 "
+            f"{pp_bubble(GATE_S, M, 'zb-h1', GATE_V):.4f}x")
+
+    # ---- 4. ZB-H1 margin at the same point -------------------------------
+    b_zb = bubble_fraction(GATE_S, M, "zb-h1", GATE_V)
+    zb_ratio = b_zb / b_il
+    csv.add("parallelism/bubble_zb_h1", 0.0,
+            f"{b_zb:.4f} (V={GATE_V}) = {zb_ratio:.2f}x 1f1b "
+            f"(target <={MAX_ZB_RATIO}x)")
+
+    # ---- 5. overlap-priced estimate bounded on a long decode trace -------
+    step_calls = layer_calls(cfg, 2, 1, 256, tp=4)
+    repeats = max(1, -(-12_000 // len(step_calls)))  # >= 12k calls total
+    trace_calls = step_calls * repeats
+    t0 = time.perf_counter()
+    roofline = get_predictor("roofline", get_hw("tpu-v5e"))
+    add = roofline.predict(trace_calls)
+    ovl = add.overlapped()
+    overlap_s = time.perf_counter() - t0
+    overlap_ratio = ovl.total_s / add.total_s if add.total_s > 0 else 1.0
+    overlap_bounded = (add.kernel_s - 1e-12 <= ovl.total_s <= add.total_s + 1e-12
+                       and ovl.total_s < add.total_s)
+    csv.add("parallelism/overlap_trace", overlap_s * 1e6 / len(trace_calls),
+            f"{len(trace_calls)} calls: overlap {ovl.total_s*1e3:.2f}ms = "
+            f"{overlap_ratio:.3f}x additive {add.total_s*1e3:.2f}ms "
+            f"({'bounded' if overlap_bounded else 'OUT OF BOUNDS'})")
 
     results = {
         "moe_archs": moe_archs,
@@ -145,6 +183,12 @@ def run(csv: Csv, smoke: bool = False) -> dict:
         "bubble_1f1b": b_il,
         "bubble_ratio": ratio,
         "max_bubble_ratio_target": MAX_BUBBLE_RATIO,
+        "bubble_zb_h1": b_zb,
+        "zb_ratio": zb_ratio,
+        "max_zb_ratio_target": MAX_ZB_RATIO,
+        "overlap_trace_calls": len(trace_calls),
+        "overlap_total_ratio": overlap_ratio,
+        "overlap_bounded": overlap_bounded,
     }
     if smoke:
         assert ep_exact, (
@@ -161,6 +205,16 @@ def run(csv: Csv, smoke: bool = False) -> dict:
         assert ratio <= MAX_BUBBLE_RATIO, (
             f"1F1B bubble is {ratio:.2f}x GPipe's at S={GATE_S}, M={M} "
             f"(target <={MAX_BUBBLE_RATIO}x) — interleaving regressed"
+        )
+        assert zb_ratio <= MAX_ZB_RATIO, (
+            f"ZB-H1 bubble is {zb_ratio:.2f}x 1F1B's at S={GATE_S}, M={M} "
+            f"(target <={MAX_ZB_RATIO}x) — the split backward stopped "
+            "filling the warmup/cooldown bubble"
+        )
+        assert overlap_bounded, (
+            f"overlap-priced trace estimate left [kernel, additive]: "
+            f"kernel {add.kernel_s:.6f}s, overlap {ovl.total_s:.6f}s, "
+            f"additive {add.total_s:.6f}s over {len(trace_calls)} calls"
         )
     return results
 

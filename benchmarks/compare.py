@@ -59,6 +59,14 @@ GATED_METRICS: List[Dict[str, Any]] = [
     # parallelism (ISSUE 5): interleaved-1F1B bubble over GPipe's
     {"file": "BENCH_parallelism.json", "key": "bubble_ratio",
      "direction": "lower", "rel_tol": 0.1},
+    # overlap-aware comm (ISSUE 10): zero-bubble ZB-H1 bubble over 1F1B's
+    # at the same gate point (analytic, deterministic)
+    {"file": "BENCH_parallelism.json", "key": "zb_ratio",
+     "direction": "lower", "rel_tol": 0.1},
+    # overlap-aware comm (ISSUE 10): overlap-priced over additive total on
+    # the >=12k-call decode trace (roofline backend, deterministic)
+    {"file": "BENCH_parallelism.json", "key": "overlap_total_ratio",
+     "direction": "lower", "rel_tol": 0.15},
     # drift control loop (ISSUE 9): re-routed over frozen p95 on a
     # step-drifted stream — how much of the drift-induced queueing the
     # monitor claws back (lower = better; far below 1 when the loop works)

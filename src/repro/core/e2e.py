@@ -1,9 +1,12 @@
 """End-to-end inference prediction (paper §V-D).
 
 The Workload Generator lowers an ArchConfig + request shape + parallelism
-into the kernel-invocation sequence a serving engine would issue (sequential
-kernel execution, no overlap — the paper's stated assumption), plus the
-collective calls of TP/EP/PP. Latency estimation is delegated to a
+into the kernel-invocation sequence a serving engine would issue, plus the
+collective calls of TP/EP/PP. The default pricing is additive (sequential
+kernel execution — the paper's stated assumption); ``comm_overlap=True``
+re-prices collectives against the cross-pipeline exposed-compute window
+(``Estimate.overlapped``), bounded between pure compute and the additive
+sum. Latency estimation is delegated to a
 ``repro.predict`` backend: ``request_estimate(cfg, ..., predictor=p)``
 returns an ``Estimate`` with the total plus per-family/per-op breakdown and
 the analytical ceiling; ``step_time``/``request_latency`` are the scalar
@@ -22,8 +25,8 @@ Modeling conventions (documented deviations):
     (G, E, C, d) tensor — byte-exact against the executed model layer
     (``decomposer.ep_alltoall_bytes`` == ``dryrun.count_ep_alltoall_bytes``);
   * PP bubbles are the exact tick counts of the executed
-    ``dist.pipeline`` schedules (GPipe or interleaved 1F1B), see
-    ``pp_bubble``;
+    ``dist.pipeline`` schedules (GPipe, interleaved 1F1B, or zero-bubble
+    ZB-H1), see ``pp_bubble``;
   * SSM (mamba2/hymba) lowers to the SSD chunked einsum structure expressed
     as gemm + elementwise calls (its MXU/VPU demands), an approximation
     noted in DESIGN.md;
@@ -157,7 +160,10 @@ def layer_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list
                     "dtype_bytes": COMPUTE_DTYPE_BYTES[cfg.compute_dtype],
                 }
             )
-            calls.append(CommCall("all_to_all", a2a, tp))  # dispatch
+            # the routed payload inherits the fused-MoE workload's routing
+            # skew (same dirichlet model), so the comm oracle prices the
+            # hot-chip serialization instead of a balanced exchange
+            calls.append(CommCall("all_to_all", a2a, tp, skew=0.3))  # dispatch
         calls.append(
             KernelCall(
                 "fused_moe",
@@ -173,7 +179,7 @@ def layer_calls(cfg: ArchConfig, B: int, qlen: int, kvlen: int, tp: int) -> list
             )
         )
         if tp > 1:
-            calls.append(CommCall("all_to_all", a2a, tp))  # combine
+            calls.append(CommCall("all_to_all", a2a, tp, skew=0.3))  # combine
         if cfg.dense_residual:
             calls += ffn_block(cfg.d_ff)
     elif fam == "ssm":
@@ -242,10 +248,16 @@ def pp_boundary_hops(pp: int, schedule: str = "gpipe", interleave: int = 2) -> i
     """Device hops an activation makes crossing stage boundaries: GPipe's
     contiguous placement crosses ``pp - 1``; the interleaved 1F1B placement
     routes every activation through all ``pp * interleave`` chunks, i.e.
-    ``pp * interleave - 1`` ring hops. Single source of truth for
-    ``request_calls`` and ``serve.trace.TraceRecorder``."""
+    ``pp * interleave - 1`` ring hops. ZB-H1 keeps the 1F1B ring but the
+    split backward (B then W ticks) re-crosses each chunk boundary with the
+    input-grad wave, doubling boundary traffic to ``2*pp*interleave - 1``
+    (the forward's ``pp*interleave - 1`` plus one B-phase hop per chunk).
+    Single source of truth for ``request_calls`` and
+    ``serve.trace.TraceRecorder``."""
     if pp <= 1:
         return 0
+    if schedule == "zb-h1":
+        return 2 * pp * interleave - 1
     return pp * interleave - 1 if schedule == "1f1b" else pp - 1
 
 
@@ -307,14 +319,18 @@ def pp_bubble(
     pre-ISSUE-5 heuristic surcharge, so existing estimates are unchanged;
     the interleaved 1F1B schedule (``schedule="1f1b"``) divides the
     fill/drain cost by ``interleave`` and is strictly cheaper whenever
-    ``pp > 1``. Returns 1.0 when not pipelined."""
+    ``pp > 1``; the zero-bubble ``"zb-h1"`` splits the backward into B/W
+    ticks that fill the warmup bubble, so its surcharge is <= 1F1B's at
+    every (pp, n_micro, interleave) (strictly smaller off the
+    ``n_micro % pp == 1`` tie region — the ordering theorem in
+    ``dist.pipeline``). Returns 1.0 when not pipelined."""
     if pp <= 1:
         return 1.0
-    from repro.dist.pipeline import schedule_ticks
+    from repro.dist.pipeline import _PHASES, schedule_ticks
 
     M = 2 * pp if n_micro is None else int(n_micro)
     ticks = schedule_ticks(pp, M, schedule, interleave)
-    work = M * (interleave if schedule == "1f1b" else 1)
+    work = M * (interleave * _PHASES[schedule] if schedule != "gpipe" else 1)
     return ticks / work
 
 
@@ -361,7 +377,7 @@ def step_time(
 def request_estimate(
     cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
     pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,
-    pp_interleave: int = 2,
+    pp_interleave: int = 2, comm_overlap: bool = False,
     predictor=None, kernel_time: Optional[Callable] = None,
     comm_time: Optional[Callable] = None, tuned: Optional[dict] = None,
 ) -> Estimate:
@@ -370,13 +386,19 @@ def request_estimate(
     to the whole estimate. ``pp_schedule``/``pp_microbatches``/
     ``pp_interleave`` pick the pipeline schedule (GPipe default; the
     interleaved 1F1B of ``dist.pipeline`` shrinks the bubble at the same
-    microbatch count). ``tuned`` applies autotuned kernel block configs
+    microbatch count, and the zero-bubble ``"zb-h1"`` shrinks it further).
+    ``comm_overlap=True`` prices collectives against the exposed-compute
+    window (``Estimate.overlapped``) instead of additively — applied
+    before the bubble surcharge, which stretches the whole per-step
+    timeline. ``tuned`` applies autotuned kernel block configs
     (``repro.tune.TunedConfigs.for_hw(hw)``)."""
     pred = _resolve_predictor(predictor, kernel_time, comm_time)
     est = pred.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp,
                                      pp_schedule=pp_schedule,
                                      pp_interleave=pp_interleave,
                                      tuned=tuned))
+    if comm_overlap:
+        est = est.overlapped()
     if pp > 1:
         est = est.scaled(
             pp_bubble(pp, pp_microbatches, pp_schedule, pp_interleave)
@@ -387,13 +409,14 @@ def request_estimate(
 def request_sweep(
     cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
     pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,
-    pp_interleave: int = 2,
+    pp_interleave: int = 2, comm_overlap: bool = False,
     hws=None, sweep: Optional[SweepPredictor] = None, backend: str = "synperf",
     **backend_kw,
 ) -> SweepResult:
     """``request_estimate`` across many devices: the same request call
     sequence priced on every hardware in ``hws`` (default: the full
     registry) with one grouping pass and a shared task/feature cache.
+    ``comm_overlap=True`` overlap-prices every device's estimate.
 
     Pass a prebuilt ``sweep=SweepPredictor(...)`` to amortize backend
     construction and cache warmth across requests; otherwise ``backend`` +
@@ -403,6 +426,8 @@ def request_sweep(
     res = sp.predict(request_calls(cfg, B, lin, lout, tp=tp, pp=pp,
                                    pp_schedule=pp_schedule,
                                    pp_interleave=pp_interleave))
+    if comm_overlap:
+        res = res.overlapped()
     if pp > 1:
         res = res.scaled(
             pp_bubble(pp, pp_microbatches, pp_schedule, pp_interleave)
@@ -413,14 +438,15 @@ def request_sweep(
 def place_request(
     cfg: ArchConfig, B: int, lin: int, lout: int, *, tp: int = 1, pp: int = 1,
     pp_schedule: str = "gpipe", pp_microbatches: Optional[int] = None,
-    pp_interleave: int = 2,
+    pp_interleave: int = 2, comm_overlap: bool = False,
     objective="latency", hws=None, backend: str = "synperf", router=None,
     **backend_kw,
 ):
     """Route one synthetic request across the hardware fleet: assemble the
     same call sequence as ``request_estimate`` (prefill + Simpson decode +
-    PP boundary traffic, bubble surcharge included) and rank every fleet
-    entry under ``objective`` (see ``repro.predict.objective``).
+    PP boundary traffic, bubble surcharge included; ``comm_overlap=True``
+    overlap-prices each candidate) and rank every fleet entry under
+    ``objective`` (see ``repro.predict.objective``).
 
     Returns a ``repro.serve.placement.Placement``. Pass a prebuilt
     ``router=FleetRouter(...)`` to amortize backend construction and cache
@@ -435,7 +461,8 @@ def place_request(
                           pp_schedule=pp_schedule, pp_interleave=pp_interleave)
     return rt.route(calls, objective=objective, n_tokens=B * lout,
                     scale=pp_bubble(pp, pp_microbatches, pp_schedule,
-                                    pp_interleave))
+                                    pp_interleave),
+                    overlap=comm_overlap)
 
 
 def simulate_fleet(

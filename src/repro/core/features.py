@@ -126,3 +126,24 @@ def analyze_summary(summary: tuple, hw: TPUSpec) -> FeatureSet:
 
 def analyze(tasks: TaskArray, chip_of: np.ndarray, hw: TPUSpec) -> FeatureSet:
     return analyze_summary(demand_summary(tasks, chip_of, hw.num_chips), hw)
+
+
+def overlap_window_s(kernel_s: float, n_comm_launches: float) -> float:
+    """Cross-pipeline exposed-compute window (ISSUE 10): the kernel time
+    the network can hide under when a trace's ``n`` collective launches
+    are spread through its ``kernel_s`` of compute.
+
+    Model: launches issue uniformly through the compute — launch ``i``
+    after ``i/(n+1)`` of it — so the serialized network stream can
+    overlap the compute that *follows* its first launch,
+    ``kernel_s * n / (n + 1)``. The window is 0 with no launches (nothing
+    to overlap), ``kernel_s/2`` for a single mid-trace collective, and
+    approaches (but never reaches) ``kernel_s`` as launches densify —
+    which is what bounds ``Estimate.overlapped()`` between pure compute
+    and the additive estimate. This is the trace-level cross-pipeline
+    feature the decomposer's per-kernel pipe demands cannot express: it
+    couples the compute pipes' occupancy with the ICI's.
+    """
+    if kernel_s <= 0.0 or n_comm_launches <= 0.0:
+        return 0.0
+    return kernel_s * n_comm_launches / (n_comm_launches + 1.0)

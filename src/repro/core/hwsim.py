@@ -22,10 +22,16 @@ is reproduced, not vendor-measured milliseconds.
 from __future__ import annotations
 
 import hashlib
+from functools import lru_cache
 
 import numpy as np
 
-from repro.core.decomposer import SCHED_POLICY, decompose, default_moe_config
+from repro.core.decomposer import (
+    SCHED_POLICY,
+    decompose,
+    default_moe_config,
+    routing_counts,
+)
 from repro.core.hardware import TPUSpec
 from repro.core.scheduler import schedule
 
@@ -120,9 +126,41 @@ def simulate(kind: str, X: dict, hw: TPUSpec, config: dict | None = None) -> flo
 # ----------------------------------------------------------------------
 
 
-def simulate_comm(op: str, nbytes: float, n_chips: int, hw: TPUSpec) -> float:
+@lru_cache(maxsize=None)
+def a2a_hot_ratio(skew: float, n_chips: int) -> float:
+    """Hot-chip serialization factor of a routing-skewed all-to-all:
+    ``max chip load / mean chip load`` under the same dirichlet routing
+    model the fused-MoE decomposition and the dry-run EP ledger use
+    (``decomposer.routing_counts``) — one expert group per chip, averaged
+    over the ledger's seed range so the factor is deterministic.
+
+    Exactly 1.0 at ``skew <= 0`` (balanced traffic — the legacy fixed
+    contention model), monotonically growing with skew: the hottest
+    chip's excess traffic serializes the exchange because every other
+    chip must wait for it to drain. Bounded by ``n_chips`` (one chip
+    receiving everything).
+    """
+    if skew <= 0.0 or n_chips <= 1:
+        return 1.0
+    ratios = []
+    for seed in range(8):  # the dry-run ledger's seed convention
+        counts = routing_counts(M=4096, E=n_chips, topk=1,
+                                skew=float(skew), seed=seed)
+        ratios.append(counts.max() / counts.mean())
+    return float(np.mean(ratios))
+
+
+def simulate_comm(
+    op: str, nbytes: float, n_chips: int, hw: TPUSpec, skew: float = 0.0
+) -> float:
     """alpha-beta collective time over the slice's ICI with contention
-    friction and noise."""
+    friction and noise.
+
+    ``skew`` (all_to_all only) is the routing-imbalance of the payload:
+    the balanced ``(n-1)/n`` exchange is stretched by the hot-chip ratio
+    :func:`a2a_hot_ratio` — at ``skew=0`` this reproduces the legacy
+    fixed contention factor exactly.
+    """
     if n_chips <= 1 or nbytes <= 0:
         return 0.0
     bw = hw.ici_gbps * 1e9 * hw.ici_links
@@ -137,5 +175,7 @@ def simulate_comm(op: str, nbytes: float, n_chips: int, hw: TPUSpec) -> float:
     beta = nbytes * steps / bw
     contention = (1.0 + 0.12 * (n_chips > 8) + 0.05 * (op == "all_reduce")
                   + 0.08 * (op == "all_to_all"))
+    if op == "all_to_all" and skew > 0.0:
+        beta *= a2a_hot_ratio(skew, n_chips)
     t = alpha + beta * contention
     return float(t * _noise(op, {"b": int(nbytes), "n": n_chips}, hw, amp=0.05))

@@ -11,17 +11,37 @@ On a real multi-host deployment the int8 payload (``q``, ``scale``) is what
 crosses the network; here compress -> dequantize runs inside the jitted step
 so the numerics (and the bytes accounted by the dry-run HLO pass) are
 faithful while the transport stays XLA's own all-reduce.
+
+:func:`ef_compress_grads_bucketed` is the overlap-ready variant (ISSUE
+10): leaves are partitioned into launch buckets in reverse tree order —
+the order backward produces gradients — so each bucket's reduce can
+launch as soon as its grads exist and hide under the remaining backward
+compute. Compression is per-leaf and reduction elementwise, so bucketing
+is bit-identical to the synchronous path by construction; the returned
+:class:`GradBucket` ledger is what the predict layer's overlap model
+prices (``Estimate.overlapped``).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ef_compress_grads", "int8_quantize", "int8_dequantize"]
+__all__ = [
+    "ef_compress_grads",
+    "ef_compress_grads_bucketed",
+    "bucket_leaves",
+    "GradBucket",
+    "int8_quantize",
+    "int8_dequantize",
+]
 
 _LEVELS = 127.0  # symmetric int8: q in [-127, 127]
+
+#: default bucket payload cap for the overlapped path (int8 wire bytes)
+DEFAULT_BUCKET_BYTES = 4 << 20
 
 
 def int8_quantize(x) -> Tuple[jax.Array, jax.Array]:
@@ -79,4 +99,108 @@ def ef_compress_grads(grads: Any, err: Optional[Any]) -> Tuple[Any, Any]:
     return (
         jax.tree_util.tree_unflatten(treedef, deq_leaves),
         jax.tree_util.tree_unflatten(treedef, new_err_leaves),
+    )
+
+
+# ----------------------------------------------------------------------
+# bucketed, overlapped error-feedback all-reduces (ISSUE 10)
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GradBucket:
+    """One overlapped all-reduce launch in the bucket ledger: which leaf
+    indices it carries (into the flattened grad tree, *reverse* leaf
+    order — the order backward produces gradients), and its int8 wire
+    payload (1 byte per element plus one f32 scale per leaf)."""
+
+    leaf_indices: Tuple[int, ...]
+    nbytes: int
+
+
+def bucket_leaves(leaves: List[Any], bucket_bytes: int) -> List[GradBucket]:
+    """Partition flattened grad leaves into launch buckets of at most
+    ``bucket_bytes`` int8 wire payload each (a leaf larger than the cap
+    gets its own bucket).
+
+    Leaves are walked in **reverse** tree order — the last layers'
+    gradients exist first during backward, so the reversed order is the
+    order each bucket's reduce can actually launch while earlier layers
+    are still computing. The returned ledger is what the overlap model in
+    ``core.e2e``/``repro.predict`` prices: one ``all_reduce`` CommCall
+    per bucket, launched as soon as the bucket fills, hideable under the
+    remaining backward compute.
+    """
+    if bucket_bytes < 1:
+        raise ValueError(f"bucket_bytes must be >= 1, got {bucket_bytes}")
+    buckets: List[GradBucket] = []
+    cur: List[int] = []
+    cur_bytes = 0
+    for i in reversed(range(len(leaves))):
+        nbytes = int(leaves[i].size) + 4  # int8 payload + f32 scale
+        if cur and cur_bytes + nbytes > bucket_bytes:
+            buckets.append(GradBucket(tuple(cur), cur_bytes))
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += nbytes
+    if cur:
+        buckets.append(GradBucket(tuple(cur), cur_bytes))
+    return buckets
+
+
+def ef_compress_grads_bucketed(
+    grads: Any,
+    err: Optional[Any],
+    *,
+    bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+    all_reduce: Optional[Callable] = None,
+) -> Tuple[Any, Any, List[GradBucket]]:
+    """Bucketed, overlap-ready variant of :func:`ef_compress_grads`.
+
+    Compression is per-leaf (absmax scale per tensor) and the reduction
+    is elementwise, so partitioning the leaves into launch buckets
+    changes *which collective carries which leaf* but not a single
+    arithmetic operation — the result is **bit-identical** to the
+    synchronous path, per construction (pinned by ``tests/test_dist.py``
+    on the 8-forced-host-device CI leg). Every EF invariant of
+    :func:`ef_compress_grads` (conservation, telescoping, residual
+    bound, structure stability) therefore holds bucket by bucket.
+
+    ``all_reduce`` optionally applies the transport per bucket (e.g.
+    ``lambda ls: [lax.pmean(x, "data") for x in ls]`` inside a
+    ``shard_map``) — launched bucket-by-bucket in reverse leaf order, the
+    order backward makes gradients available, so XLA can hide each
+    bucket's reduce under the remaining backward compute. ``None`` keeps
+    the transport outside (the synchronous-train-step default, where
+    XLA's own all-reduce stays the wire).
+
+    Returns ``(dequantized_grads, new_err, ledger)`` — the ledger is the
+    per-bucket launch schedule the predict layer turns into overlapped
+    ``CommCall``s.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if err is None:
+        err_leaves = [jnp.zeros(g.shape, jnp.float32) for g in leaves]
+    else:
+        err_leaves = treedef.flatten_up_to(err)
+
+    ledger = bucket_leaves(leaves, bucket_bytes)
+    deq_leaves: List[Any] = [None] * len(leaves)
+    new_err_leaves: List[Any] = [None] * len(leaves)
+    for bucket in ledger:
+        bucket_deq = []
+        for i in bucket.leaf_indices:
+            target = leaves[i].astype(jnp.float32) + err_leaves[i]
+            q, scale = int8_quantize(target)
+            deq = int8_dequantize(q, scale)
+            bucket_deq.append(deq)
+            new_err_leaves[i] = target - deq
+        if all_reduce is not None:
+            bucket_deq = all_reduce(bucket_deq)
+        for i, deq in zip(bucket.leaf_indices, bucket_deq):
+            deq_leaves[i] = deq
+    return (
+        jax.tree_util.tree_unflatten(treedef, deq_leaves),
+        jax.tree_util.tree_unflatten(treedef, new_err_leaves),
+        ledger,
     )

@@ -1,14 +1,15 @@
-"""Pipeline parallelism via ``shard_map`` + collective permutes: GPipe and
-interleaved-1F1B schedules, plus the analytical bubble models the predictor
-uses (``core.e2e.pp_bubble``).
+"""Pipeline parallelism via ``shard_map`` + collective permutes: GPipe,
+interleaved-1F1B and zero-bubble ZB-H1 schedules, plus the analytical
+bubble models the predictor uses (``core.e2e.pp_bubble``).
 
-Both schedules stream microbatches around a ring of ``S`` pipeline stages
+All schedules stream microbatches around a ring of ``S`` pipeline stages
 (one device per stage along the pipeline mesh axis). The layer stack
 (leaves stacked along a leading layer dim, the layout ``Segment.init``
 produces) is split into contiguous chunks in layer order; at every tick a
 device applies one chunk to the activation it holds, then ``ppermute``
-shifts activations one stage down the ring. The two schedules differ only
-in how many chunks each device owns:
+shifts activations one stage down the ring. The schedules differ only
+in how many chunks each device owns and how long a microbatch occupies
+its ring slot:
 
 ``schedule="gpipe"``
     One chunk per device (``n_layers / S`` layers). A microbatch makes
@@ -29,6 +30,30 @@ in how many chunks each device owns:
     what sets the bubble, for forward-only serving exactly as for
     training.)
 
+``schedule="zb-h1"``
+    The zero-bubble three-phase schedule (ZB-H1 lineage): backward is
+    split into B (input-grad) and W (weight-grad) ticks, so each
+    microbatch's ring lifecycle is ``3*V*S`` chunk-ticks — ``V*S``
+    F ticks that apply the layer chunks in order, ``V*S`` B occupancy
+    ticks (the input-grad wave re-crossing every chunk boundary in the
+    same ring direction), and ``V*S`` W ticks whose weight-grad work is
+    what fills the warmup/cooldown slots that 1F1B leaves idle. All
+    three phases are useful per-device work, so with three times the
+    work amortizing the *same* straggler drain the bubble shrinks:
+    ``1 - 3*V*M / ticks`` with
+    ``ticks = 3*V*S*ceil(M/S) + (M-1) mod S`` — for ``S | M`` and
+    ``V = 1`` that is ``3M + S - 1`` ticks, the canonical ZB-H1
+    makespan. The executed forward applies chunks only during the F
+    phase and carries the finished activation through the B/W occupancy
+    ticks, so numerics still equal the sequential scan exactly.
+
+    Ordering theorem (pinned by ``tests/test_zero_bubble.py``): with
+    ``r = (M-1) mod S``, ``bubble(zb-h1) <= bubble(1f1b)`` iff
+    ``3 * ticks_1f1b >= ticks_zb`` iff ``2r >= 0`` — always true, and
+    *strict* exactly when ``r != 0`` (at ``M ≡ 1 (mod S)`` the lone
+    straggler drains identically under both and they tie, the same tie
+    region as 1F1B-vs-GPipe).
+
 Every analytical quantity here is *exact*, not asymptotic:
 :func:`schedule_ticks` is the precise number of ring ticks the shard_map
 implementation scans, :func:`simulate_schedule` re-derives it by stepping
@@ -37,7 +62,7 @@ the ring event by event (the property tests pin closed form == simulation
 is ``1 - ideal_work / ticks`` in consistent tick units.
 
 Numerics match a sequential ``lax.scan`` over the full stack exactly for
-both schedules: each microbatch sees the same layer order and the same
+all schedules: each microbatch sees the same layer order and the same
 per-microbatch operand shapes, only interleaved in time across devices.
 """
 from __future__ import annotations
@@ -61,7 +86,12 @@ __all__ = [
 ]
 
 #: schedules pipeline_forward / schedule_ticks / bubble_fraction understand
-SCHEDULES = ("gpipe", "1f1b")
+SCHEDULES = ("gpipe", "1f1b", "zb-h1")
+
+#: lifecycle phases per ring slot: 1F1B runs forward only (F); ZB-H1 adds
+#: the B (input-grad) and W (weight-grad) occupancy phases — 3x the
+#: per-microbatch chunk-ticks on the same slot machine
+_PHASES = {"gpipe": 1, "1f1b": 1, "zb-h1": 3}
 
 
 def _check_schedule(schedule: str) -> None:
@@ -75,18 +105,21 @@ def schedule_ticks(
     """Exact ring-tick count of the executed :func:`pipeline_forward`
     schedule (the length of its ``lax.scan``).
 
-    GPipe: ``M + S - 1``. Interleaved 1F1B with ``V`` chunks per device:
-    the ring holds at most ``S`` in-flight microbatches (one slot per
-    device), a microbatch occupies its slot for ``V*S`` ticks, and a new
-    one can enter stage 0 only when the incoming slot is free — giving
+    GPipe: ``M + S - 1``. The ring schedules hold at most ``S`` in-flight
+    microbatches (one slot per device); a microbatch occupies its slot
+    for its full lifecycle ``L`` and a new one can enter stage 0 only
+    when the incoming slot is free — giving
 
-        ``V*S * ceil(M/S) + (M-1) mod S``
+        ``L * ceil(M/S) + (M-1) mod S``
 
-    for any ``M >= 1`` (``V*M + S - 1`` when ``S`` divides ``M``, the
-    Megatron interleaved form). With ``interleave=1`` the 1F1B count
-    degenerates to GPipe's ``M + S - 1`` — the ring is the same machine.
-    Note a 1F1B tick is ``1/V`` of a GPipe tick (a chunk is ``1/V`` of a
-    stage); :func:`bubble_fraction` normalizes for that.
+    with ``L = V*S`` for interleaved 1F1B (``V*M + S - 1`` when ``S``
+    divides ``M``, the Megatron interleaved form) and ``L = 3*V*S`` for
+    ZB-H1 (the F/B/W three-phase lifecycle; ``3M + S - 1`` at ``V = 1``
+    and ``S | M``, the canonical ZB-H1 makespan). With ``interleave=1``
+    the 1F1B count degenerates to GPipe's ``M + S - 1`` — the ring is
+    the same machine. Note a ring tick is ``1/V`` of a GPipe tick (a
+    chunk is ``1/V`` of a stage); :func:`bubble_fraction` normalizes for
+    that.
     """
     _check_schedule(schedule)
     S, M = int(n_stages), int(n_micro)
@@ -97,7 +130,7 @@ def schedule_ticks(
     V = int(interleave)
     if V < 1:
         raise ValueError(f"interleave must be >= 1, got {V}")
-    return V * S * math.ceil(M / S) + (M - 1) % S
+    return _PHASES[schedule] * V * S * math.ceil(M / S) + (M - 1) % S
 
 
 def bubble_fraction(
@@ -105,17 +138,21 @@ def bubble_fraction(
 ) -> float:
     """Idle fraction of the schedule: ``1 - ideal_work / ticks``.
 
-    Per-device ideal work is ``M`` stage-ticks for GPipe and ``V*M``
-    chunk-ticks for 1F1B (same wall-clock — a chunk-tick is ``1/V`` of a
-    stage-tick), so the fractions are directly comparable across
-    schedules. For all ``(S, M >= 1)`` the 1F1B fraction is <= GPipe's,
-    strictly smaller whenever ``S > 1``, ``interleave >= 2`` and
-    ``M mod S != 1`` (at ``M ≡ 1 (mod S)`` the straggler microbatch drains
-    alone under both schedules and they tie) — pinned by the property
-    tests in ``tests/test_parallelism.py``.
+    Per-device ideal work is ``M`` stage-ticks for GPipe, ``V*M``
+    chunk-ticks for 1F1B and ``3*V*M`` for ZB-H1 (F + B + W are all
+    useful per-device compute; a chunk-tick is ``1/V`` of a stage-tick),
+    so the fractions are directly comparable across schedules. For all
+    ``(S, M >= 1)``: the 1F1B fraction is <= GPipe's, strictly smaller
+    whenever ``S > 1``, ``interleave >= 2`` and ``M mod S != 1`` (at
+    ``M ≡ 1 (mod S)`` the straggler microbatch drains alone under both
+    schedules and they tie); and the ZB-H1 fraction is <= 1F1B's at the
+    same ``V``, strictly smaller exactly when ``(M - 1) mod S != 0`` —
+    pinned by the property tests in ``tests/test_parallelism.py`` and
+    ``tests/test_zero_bubble.py``.
     """
     ticks = schedule_ticks(n_stages, n_micro, schedule, interleave)
-    work = n_micro * (interleave if schedule == "1f1b" else 1)
+    V = 1 if schedule == "gpipe" else int(interleave)
+    work = n_micro * V * _PHASES[schedule]
     return (ticks - work) / ticks
 
 
@@ -132,17 +169,21 @@ def simulate_schedule(
 
     Steps the exact machine :func:`pipeline_forward` implements — one
     in-flight slot per device, stage-0 injection only into a free slot,
-    one chunk applied per tick, then a ring shift — and returns the tick
-    at which the **last** microbatch completes. This is an independent
-    derivation of :func:`schedule_ticks` (no shared arithmetic); the
-    property tests assert simulation == closed form for both schedules
-    across the whole ``(S, M, V)`` grid, which is what licenses using the
-    closed form as the analytical bubble model in ``core.e2e``.
+    one lifecycle tick per ring tick, then a ring shift — and returns the
+    tick at which the **last** microbatch completes. For ZB-H1 a slot's
+    lifecycle spans the three phases (``g // (V*S)`` is 0 during F, 1
+    during B, 2 during W); occupancy and completion are what set the tick
+    count, so the same machine covers all ring schedules. This is an
+    independent derivation of :func:`schedule_ticks` (no shared
+    arithmetic); the property tests assert simulation == closed form for
+    every schedule across the whole ``(S, M, V)`` grid, which is what
+    licenses using the closed form as the analytical bubble model in
+    ``core.e2e``.
     """
     _check_schedule(schedule)
     S, M = int(n_stages), int(n_micro)
-    V = int(interleave) if schedule == "1f1b" else 1
-    total_stages = V * S
+    V = int(interleave) if schedule != "gpipe" else 1
+    total_stages = _PHASES[schedule] * V * S
     slots: list = [None] * S  # per-device in-flight (microbatch, next stage)
     next_m = done = ticks = 0
     while done < M:
@@ -193,6 +234,12 @@ def pipeline_forward(
       ``schedule_ticks(S, M, "1f1b", interleave)`` ticks. Any ``M >= 1``
       is supported (non-divisible microbatch counts pay the straggler
       drain the analytical model prices).
+    * ``schedule="zb-h1"``: the zero-bubble three-phase ring; same layer
+      divisibility as 1F1B. Chunks are applied during the F phase
+      (lifecycle ticks ``< V*S``); the B/W phases carry the finished
+      activation as occupancy ticks, so the output still equals the
+      sequential scan. Runs exactly
+      ``schedule_ticks(S, M, "zb-h1", interleave)`` ticks.
 
     Args:
       layer_fn: ``(layer_params, h) -> h`` for a single layer; applied to
@@ -211,8 +258,10 @@ def pipeline_forward(
     """
     _check_schedule(schedule)
     axis = axis or mesh.axis_names[0]
-    if schedule == "1f1b":
-        return _forward_1f1b(layer_fn, params, x, mesh, axis, interleave, ticks)
+    if schedule in ("1f1b", "zb-h1"):
+        return _forward_ring(
+            layer_fn, params, x, mesh, axis, interleave, ticks, schedule
+        )
     return _forward_gpipe(layer_fn, params, x, mesh, axis, ticks)
 
 
@@ -267,7 +316,8 @@ def _forward_gpipe(layer_fn, params, x, mesh, axis, ticks=None):
     )(params, x)
 
 
-def _forward_1f1b(layer_fn, params, x, mesh, axis, interleave, ticks=None):
+def _forward_ring(layer_fn, params, x, mesh, axis, interleave, ticks=None,
+                  schedule="1f1b"):
     n_stages = mesh.shape[axis]
     V = int(interleave)
     if V < 1:
@@ -280,9 +330,12 @@ def _forward_1f1b(layer_fn, params, x, mesh, axis, interleave, ticks=None):
         )
     per_chunk = n_layers // (n_stages * V)
     n_micro = x.shape[0]
-    total_stages = V * n_stages
+    # forward chunk-stages apply layers; ZB-H1 extends the slot lifecycle
+    # with the B/W occupancy phases (chunks applied only while g < V*S)
+    forward_stages = V * n_stages
+    total_stages = _PHASES[schedule] * forward_stages
     n_ticks = (
-        schedule_ticks(n_stages, n_micro, "1f1b", V) if ticks is None else ticks
+        schedule_ticks(n_stages, n_micro, schedule, V) if ticks is None else ticks
     )
     ring = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
@@ -324,12 +377,15 @@ def _forward_1f1b(layer_fn, params, x, mesh, axis, interleave, ticks=None):
             m = jnp.where(inject, next_m, m)
             live = jnp.where(inject, 1, live)
             next_m = next_m + inject.astype(jnp.int32)
-            # process the local chunk this slot's next stage maps to
+            # process the local chunk this slot's next stage maps to; B/W
+            # occupancy ticks (zb-h1, g >= V*S) carry h through unchanged
             j = jnp.clip(g // n_stages, 0, V - 1)
             y = apply_chunk(j, h)
-            h = jnp.where(live == 1, y, h)
+            h = jnp.where(
+                jnp.logical_and(live == 1, g < forward_stages), y, h
+            )
             g = g + 1
-            # the final chunk-stage (g == V*S) completes on device S-1
+            # the final lifecycle tick (g == phases*V*S) lands on device S-1
             fin = jnp.logical_and(live == 1, g >= total_stages)
             idx = jnp.clip(m, 0, n_micro - 1)
             cur = lax.dynamic_index_in_dim(outputs, idx, keepdims=False)

@@ -25,12 +25,21 @@ class KernelCall:
 
 @dataclasses.dataclass
 class CommCall:
-    """One collective: op name, payload bytes, participant count."""
+    """One collective: op name, payload bytes, participant count.
+
+    ``skew`` is the routing-imbalance knob for all-to-alls (the same
+    dirichlet skew the fused-MoE decomposition's ``routing_counts``
+    uses): 0 = balanced traffic (the legacy contention model, exactly),
+    larger = a hotter chip serializing the exchange. Backends that model
+    congestion (the hwsim oracle) price it; alpha-beta regressor
+    backends are fitted on balanced traffic and apply the analytical
+    hot-chip factor on top."""
 
     op: str
     nbytes: float
     n_units: int
     count: float = 1
+    skew: float = 0.0
 
 
 # a call sequence may nest groups: (label, repetitions, sub-sequence),
@@ -78,6 +87,13 @@ class Estimate:
     ``fallbacks`` records which families were served by a substitute
     backend (explicit-fallback policy) — empty when every family had a
     model.
+
+    ``overlap_window_s`` is the cross-pipeline exposed-compute window
+    (``repro.core.features.overlap_window_s``): the kernel time the
+    network can hide under when collectives launch as early as their
+    operands exist. ``total_s`` is still the *additive* (serialized)
+    sum — :meth:`overlapped` re-prices with the window subtracted from
+    the comm component, bounded below by pure compute.
     """
 
     total_s: float
@@ -89,6 +105,9 @@ class Estimate:
     n_kernel_calls: float
     n_comm_calls: float
     fallbacks: dict
+    #: exposed-compute window the comm can hide under (None for backends
+    #: that cannot derive it, e.g. the legacy two-lambda adapter)
+    overlap_window_s: Optional[float] = None
 
     def scaled(self, k: float) -> "Estimate":
         """Scale every latency component by ``k`` (e.g. the pipeline
@@ -103,6 +122,40 @@ class Estimate:
             n_kernel_calls=self.n_kernel_calls,
             n_comm_calls=self.n_comm_calls,
             fallbacks=dict(self.fallbacks),
+            overlap_window_s=(
+                None if self.overlap_window_s is None else self.overlap_window_s * k
+            ),
+        )
+
+    def overlapped(self, window_s: Optional[float] = None) -> "Estimate":
+        """Overlap-aware re-pricing: per-step comm becomes
+        ``max(0, comm_s - window)`` instead of additive.
+
+        ``window_s`` defaults to the estimate's own ``overlap_window_s``
+        (falling back to 0.0 — i.e. the additive estimate — when the
+        backend could not derive one). The window never exceeds
+        ``kernel_s`` by construction, so the overlapped total is always
+        bounded: ``kernel_s <= total_s' <= kernel_s + comm_s`` — never
+        below pure compute, never above the additive estimate (the
+        regression ``tests``/``bench_parallelism`` gate). The per-op
+        breakdown is rescaled proportionally so it still sums to the
+        exposed comm time.
+        """
+        w = self.overlap_window_s if window_s is None else window_s
+        w = 0.0 if w is None else min(max(w, 0.0), self.kernel_s)
+        exposed = max(0.0, self.comm_s - w)
+        shrink = exposed / self.comm_s if self.comm_s > 0 else 0.0
+        return Estimate(
+            total_s=self.kernel_s + exposed,
+            kernel_s=self.kernel_s,
+            comm_s=exposed,
+            theoretical_s=self.theoretical_s,
+            by_family=dict(self.by_family),
+            by_comm_op={o: t * shrink for o, t in self.by_comm_op.items()},
+            n_kernel_calls=self.n_kernel_calls,
+            n_comm_calls=self.n_comm_calls,
+            fallbacks=dict(self.fallbacks),
+            overlap_window_s=w,
         )
 
     def pretty(self) -> str:
@@ -126,4 +179,6 @@ class Predictor(Protocol):
 
     def kernel_time(self, kind: str, X: dict) -> float: ...
 
-    def comm_time(self, op: str, nbytes: float, n_units: int) -> float: ...
+    def comm_time(
+        self, op: str, nbytes: float, n_units: int, skew: float = 0.0
+    ) -> float: ...

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import hwsim
 from repro.core.dataset import KernelDataset
+from repro.core.features import overlap_window_s
 from repro.core.hardware import TPUSpec
 from repro.predict.api import CallSeq, Estimate, KernelCall, UntrainedFamilyError
 from repro.predict.batching import FeatureCache, group_calls
@@ -77,8 +78,16 @@ class BasePredictor:
             self._comm = CommRegressor().fit(self.hw)
         return self._comm
 
-    def _comm_latency(self, op: str, nbytes: float, n_units: int) -> float:
-        return self.comm.predict(op, nbytes, n_units)
+    def _comm_latency(
+        self, op: str, nbytes: float, n_units: int, skew: float = 0.0
+    ) -> float:
+        # the alpha-beta regressor is fitted on balanced traffic; routing
+        # skew stretches the exchange by the analytical hot-chip factor
+        # (the same model the hwsim oracle prices natively)
+        t = self.comm.predict(op, nbytes, n_units)
+        if op == "all_to_all" and skew > 0.0:
+            t *= hwsim.a2a_hot_ratio(skew, n_units)
+        return t
 
     # -- batched prediction ----------------------------------------------
 
@@ -130,8 +139,8 @@ class BasePredictor:
         by_comm: dict = {}
         comm_s = 0.0
         n_comm = 0.0
-        for (op, nbytes, n_units), w in comms.items():
-            t = w * self._comm_latency(op, nbytes, n_units)
+        for (op, nbytes, n_units, skew), w in comms.items():
+            t = w * self._comm_latency(op, nbytes, n_units, skew)
             by_comm[op] = by_comm.get(op, 0.0) + t
             comm_s += t
             n_comm += w
@@ -145,6 +154,9 @@ class BasePredictor:
             n_kernel_calls=n_kernel,
             n_comm_calls=n_comm,
             fallbacks=fallbacks,
+            # cross-pipeline exposed-compute window (features.overlap_window_s):
+            # what Estimate.overlapped() subtracts from the comm component
+            overlap_window_s=overlap_window_s(kernel_s, n_comm),
         )
 
     # -- scalar conveniences ----------------------------------------------
@@ -152,8 +164,10 @@ class BasePredictor:
     def kernel_time(self, kind: str, X: dict) -> float:
         return self.predict([KernelCall(kind, X)]).kernel_s
 
-    def comm_time(self, op: str, nbytes: float, n_units: int) -> float:
-        return self._comm_latency(op, nbytes, n_units)
+    def comm_time(
+        self, op: str, nbytes: float, n_units: int, skew: float = 0.0
+    ) -> float:
+        return self._comm_latency(op, nbytes, n_units, skew)
 
     def as_times(self) -> tuple:
         """Legacy ``(kernel_time, comm_time)`` lambda pair (the old
@@ -209,8 +223,10 @@ class OraclePredictor(BasePredictor):
     def _family_latencies(self, kind: str, workloads: list) -> np.ndarray:
         return self._oracle_latencies(kind, workloads)
 
-    def _comm_latency(self, op: str, nbytes: float, n_units: int) -> float:
-        return hwsim.simulate_comm(op, nbytes, n_units, self.hw)
+    def _comm_latency(
+        self, op: str, nbytes: float, n_units: int, skew: float = 0.0
+    ) -> float:
+        return hwsim.simulate_comm(op, nbytes, n_units, self.hw, skew)
 
 
 class BaselinePredictor(BasePredictor):
@@ -269,7 +285,11 @@ class CallableTimesPredictor(BasePredictor):
     def _family_latencies(self, kind: str, workloads: list) -> np.ndarray:
         return np.asarray([self._kernel_time(kind, X) for X in workloads], np.float64)
 
-    def _comm_latency(self, op: str, nbytes: float, n_units: int) -> float:
+    def _comm_latency(
+        self, op: str, nbytes: float, n_units: int, skew: float = 0.0
+    ) -> float:
+        # the legacy two-lambda callables predate the skew knob; balanced
+        # pricing keeps the deprecation shim bit-stable
         return self._comm_time(op, nbytes, n_units)
 
 

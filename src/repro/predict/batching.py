@@ -180,7 +180,7 @@ class FamilyGroup:
 def group_calls(calls: CallSeq) -> tuple[dict, dict]:
     """Flatten ``calls`` and group: kernel calls into per-family
     ``FamilyGroup``s deduplicated by canonical workload, comm calls into
-    ``{(op, nbytes, n_units): weight}``."""
+    ``{(op, nbytes, n_units, skew): weight}``."""
     families: dict[str, FamilyGroup] = {}
     index: dict[tuple, int] = {}
     comms: dict[tuple, float] = {}
@@ -198,7 +198,7 @@ def group_calls(calls: CallSeq) -> tuple[dict, dict]:
             else:
                 families[call.kind].weights[i] += w
         elif isinstance(call, CommCall):
-            key = (call.op, call.nbytes, call.n_units)
+            key = (call.op, call.nbytes, call.n_units, call.skew)
             comms[key] = comms.get(key, 0.0) + w
         else:
             raise TypeError(f"not a KernelCall/CommCall: {call!r}")

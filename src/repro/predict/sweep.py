@@ -97,6 +97,13 @@ class SweepResult:
     def scaled(self, k: float) -> "SweepResult":
         return SweepResult({n: e.scaled(k) for n, e in self.estimates.items()})
 
+    def overlapped(self) -> "SweepResult":
+        """Overlap-aware re-pricing of every device's estimate
+        (``Estimate.overlapped``): each uses its own exposed-compute
+        window, so slower devices (longer kernel time for the same trace)
+        hide proportionally more of the same collectives."""
+        return SweepResult({n: e.overlapped() for n, e in self.estimates.items()})
+
     def table(self) -> str:
         """Per-hw latency table, seen/unseen tagged, fastest first."""
         rows = sorted(self.estimates.items(), key=lambda kv: kv[1].total_s)

@@ -372,8 +372,12 @@ class FleetSimulator:
         ``route_many`` under residual-corrected service times mid-replay —
         the fleet re-balances and the report's ``reroutes`` log says when
         and how. Either argument switches to the event-by-event control
-        path (autoscale is not supported there); with both ``None`` the
-        vectorized frozen-assignment path is bit-identical to before."""
+        path; autoscaling composes with it (each pool resizes at its
+        window boundaries from the window's *measured* rate and service
+        times, the same rule as :func:`simulate_queue` — which prices
+        drifted hardware at its drifted load, not the frozen prediction).
+        With both ``None`` the vectorized frozen-assignment path is
+        bit-identical to before."""
         if arrivals is None:
             if rate_rps is None or n_requests is None:
                 raise ValueError(
@@ -391,12 +395,9 @@ class FleetSimulator:
         class_ids = np.asarray(class_ids)
         policy = self.autoscale if autoscale is None else autoscale
         if drift is not None or monitor is not None:
-            if policy is not None:
-                raise ValueError(
-                    "drift/monitor replay does not support autoscaling yet; "
-                    "pass autoscale=None (and construct without a policy)"
-                )
-            return self._replay_controlled(arrivals, class_ids, drift, monitor)
+            return self._replay_controlled(
+                arrivals, class_ids, drift, monitor, policy
+            )
         svc_by_class = np.asarray(
             [self.service_s(c.name) for c in self.classes], float
         )
@@ -448,7 +449,9 @@ class FleetSimulator:
     # ------------------------------------------------------------------
     # drift control loop
 
-    def _replay_controlled(self, arrivals, class_ids, drift, monitor) -> FleetReport:
+    def _replay_controlled(
+        self, arrivals, class_ids, drift, monitor, autoscale=None
+    ) -> FleetReport:
         """Event-by-event replay with drift injection and/or residual
         monitoring (the production control loop, simulated).
 
@@ -461,7 +464,15 @@ class FleetSimulator:
         per-hw corrections, the event is logged, and the monitor resets —
         its history measured the *old* baseline. Without drift and with a
         quiet monitor this path reproduces the vectorized frozen replay
-        exactly (same per-hw FIFO heaps, same arithmetic)."""
+        exactly (same per-hw FIFO heaps, same arithmetic).
+
+        ``autoscale`` (an :class:`AutoscalePolicy`) composes with the
+        control loop: each pool tracks its own window boundaries on the
+        absolute clock and resizes from the previous window's arrival
+        rate and mean *measured* service time — the same resize rule as
+        :func:`simulate_queue` (where measured == predicted, since that
+        path has no drift), so drifted hardware is scaled for the load it
+        actually serves."""
         from repro.predict.objective import (
             ResidualCorrectedObjective,
             get_objective,
@@ -484,6 +495,12 @@ class FleetSimulator:
         pools: dict = {}  # hw -> heap of replica next-free times
         # per-hw accumulators for the report
         acc: dict = {}  # hw -> dict(lat=[], wait=[], busy=0.0, classes=set)
+        # per-hw autoscale state: next window boundary, window arrival
+        # count / measured-service sum, replica trajectory
+        boundary: dict = {}  # hw -> next resize time
+        win_count: dict = {}
+        win_service: dict = {}
+        traj: dict = {}  # hw -> [(t, n), ...]
 
         for i in range(n):
             a = float(arrivals[i])
@@ -494,9 +511,40 @@ class FleetSimulator:
                 pool = [0.0] * self.pool_size(hw)
                 heapq.heapify(pool)
                 pools[hw] = pool
+                traj[hw] = [(0.0, len(pool))]
+                if autoscale is not None:
+                    boundary[hw] = autoscale.window_s
+                    win_count[hw], win_service[hw] = 0, 0.0
+            while autoscale is not None and a >= boundary[hw]:
+                b = boundary[hw]
+                rate = win_count[hw] / autoscale.window_s
+                mean_svc = (
+                    win_service[hw] / win_count[hw] if win_count[hw] else 0.0
+                )
+                desired = max(
+                    autoscale.min_replicas,
+                    min(
+                        autoscale.max_replicas,
+                        math.ceil(
+                            rate * mean_svc / autoscale.target_utilization
+                        )
+                        if win_count[hw]
+                        else autoscale.min_replicas,
+                    ),
+                )
+                while len(pool) < desired:
+                    heapq.heappush(pool, b)
+                while len(pool) > desired:
+                    heapq.heappop(pool)
+                traj[hw].append((b, len(pool)))
+                win_count[hw], win_service[hw] = 0, 0.0
+                boundary[hw] = b + autoscale.window_s
             base = self.placements[c.name][hw].total_s
             measured = base * drift_factor(specs, hw, a)
             predicted = base * cum_corr.get(hw, 1.0)
+            if autoscale is not None:
+                win_count[hw] += 1
+                win_service[hw] += measured
             t_free = heapq.heappop(pool)
             start = a if a >= t_free else t_free
             done = start + measured
@@ -548,13 +596,18 @@ class FleetSimulator:
             size = self.pool_size(hw)
             hw_last = float(max(pools[hw]))  # last completion on this pool
             horizon = max(horizon, hw_last)
-            capacity = size * hw_last
+            # integrated capacity over the replica trajectory (constant
+            # [(0, size)] without autoscaling -> size * hw_last, as before)
+            hw_traj = traj[hw]
+            capacity = 0.0
+            for (t0, cnt), (t1, _) in zip(hw_traj, hw_traj[1:] + [(hw_last, 0)]):
+                capacity += cnt * max(min(t1, hw_last) - t0, 0.0)
             per_hw[hw] = HardwareLoad(
                 hw=hw,
                 classes=sorted(st["classes"]),
                 n_requests=len(lat),
                 replicas=size,
-                final_replicas=size,
+                final_replicas=len(pools[hw]),
                 latency_p50_s=float(np.percentile(lat, 50)),
                 latency_p95_s=float(np.percentile(lat, 95)),
                 latency_p99_s=float(np.percentile(lat, 99)),
@@ -562,7 +615,7 @@ class FleetSimulator:
                 wait_mean_s=float(wait.mean()),
                 utilization=float(st["busy"] / capacity) if capacity > 0 else 0.0,
                 busy_s=float(st["busy"]),
-                replica_traj=[(0.0, size)],
+                replica_traj=hw_traj,
             )
         return FleetReport(
             assignment=assignment,

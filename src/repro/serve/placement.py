@@ -244,13 +244,17 @@ class FleetRouter:
         objective=None,
         n_tokens: Optional[float] = None,
         scale: float = 1.0,
+        overlap: bool = False,
     ) -> Placement:
         """Price ``calls`` on every fleet entry (one grouping pass, shared
         cache) and rank under the objective.
 
         ``n_tokens`` is the generated-token count (needed by per-token
         objectives); ``scale`` multiplies every estimate (e.g. the PP
-        bubble surcharge ``place_request`` applies). Hardware whose
+        bubble surcharge ``place_request`` applies); ``overlap=True``
+        overlap-prices each candidate (``Estimate.overlapped``, applied
+        before ``scale``) — each device uses its own exposed-compute
+        window, which can re-rank comm-bound fleets. Hardware whose
         backend raises while pricing (unfitted comm regressor, untrained
         family under ``fallback="error"``) is skipped with a warning."""
         obj = self.objective if objective is None else get_objective(objective)
@@ -266,6 +270,8 @@ class FleetRouter:
                 )
                 skipped[hw.name] = f"{type(e).__name__}: {e}"
                 continue
+            if overlap:
+                est = est.overlapped()
             estimates[hw.name] = est if scale == 1.0 else est.scaled(scale)
         return self._rank(estimates, obj, n_tokens, skipped)
 

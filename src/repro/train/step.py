@@ -9,7 +9,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.dist.collectives import ef_compress_grads
+from repro.dist.collectives import (
+    DEFAULT_BUCKET_BYTES,
+    ef_compress_grads,
+    ef_compress_grads_bucketed,
+)
 from repro.models.registry import ModelApi
 from repro.optim.adamw import AdamW, AdamWState
 
@@ -18,6 +22,12 @@ from repro.optim.adamw import AdamW, AdamWState
 class TrainConfig:
     microbatches: int = 1  # gradient accumulation
     compress_grads: bool = False  # int8 error-feedback compression
+    # overlapped transport: bucket the EF all-reduces in reverse leaf
+    # order (backward availability) so each bucket launches as soon as
+    # its grads exist — numerically bit-identical to the synchronous
+    # path (tests/test_dist.py); only the launch schedule changes
+    overlap_grads: bool = False
+    bucket_bytes: int = DEFAULT_BUCKET_BYTES
     lr: float = 3e-4
     warmup: int = 100
     total_steps: int = 10_000
@@ -116,7 +126,12 @@ def make_train_step(api: ModelApi, optimizer: AdamW, tc: TrainConfig):
         loss, metrics, grads = compute_grads(state["params"], batch)
         err = state.get("err")
         if tc.compress_grads:
-            grads, err = ef_compress_grads(grads, err)
+            if tc.overlap_grads:
+                grads, err, _ = ef_compress_grads_bucketed(
+                    grads, err, bucket_bytes=tc.bucket_bytes
+                )
+            else:
+                grads, err = ef_compress_grads(grads, err)
         new_params, new_opt, opt_metrics = optimizer.update(
             grads, state["opt"], state["params"]
         )

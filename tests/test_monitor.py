@@ -309,10 +309,45 @@ def test_drift_rejects_unknown_hardware(sim):
                    drift={"tpu-v99": 2.0})
 
 
-def test_drift_replay_rejects_autoscale(sim):
+def test_drift_replay_composes_with_autoscale(sim):
+    """Drift + autoscale in one controlled replay (ISSUE 10): the pool
+    under 2x drift resizes for the *measured* load, every request is
+    served exactly once, and utilization stays <= 1 against the
+    trajectory-integrated capacity."""
     from repro.serve.fleet import AutoscalePolicy
 
-    with pytest.raises(ValueError, match="autoscal"):
-        sim.replay(rate_rps=1.0, n_requests=10, seed=0,
-                   drift={"tpu-v6e": 2.0},
-                   autoscale=AutoscalePolicy(window_s=1.0))
+    rate = 0.8 * sim.saturation_rate_rps()
+    # ~10 resize windows across the stream's expected span
+    pol = AutoscalePolicy(window_s=2000 / rate / 10, target_utilization=0.6,
+                          min_replicas=1, max_replicas=16)
+    rep = sim.replay(rate_rps=rate, n_requests=2000, seed=11,
+                     drift={"tpu-v6e": 2.0}, autoscale=pol)
+    assert sum(l.n_requests for l in rep.per_hw.values()) == 2000
+    load = rep.per_hw["tpu-v6e"]
+    assert 0.0 < load.utilization <= 1.0 + 1e-9
+    # drifted load at 0.8x nominal saturation exceeds the 2-replica pool's
+    # capacity, so the policy must have grown it
+    assert load.final_replicas > load.replicas
+    assert len(load.replica_traj) > 1
+    assert load.replica_traj[-1][1] == load.final_replicas
+
+
+def test_autoscaled_quiet_monitor_matches_vectorized_autoscale(sim):
+    """With a quiet monitor and no drift, the controlled autoscale path
+    reproduces the vectorized ``simulate_queue`` resize arithmetic
+    bit-for-bit — trajectory, capacity integral and latencies."""
+    from repro.serve.fleet import AutoscalePolicy
+
+    rate = 0.8 * sim.saturation_rate_rps()
+    pol = AutoscalePolicy(window_s=1500 / rate / 10, target_utilization=0.6,
+                          min_replicas=1, max_replicas=16)
+    kw = dict(rate_rps=rate, n_requests=1500, seed=5, autoscale=pol)
+    vec = sim.replay(**kw)
+    ctl = sim.replay(monitor=ResidualMonitor(), **kw)
+    assert ctl.reroutes == []
+    assert np.array_equal(vec.latencies, ctl.latencies)
+    for hw, load in vec.per_hw.items():
+        assert ctl.per_hw[hw].replica_traj == load.replica_traj
+        assert ctl.per_hw[hw].final_replicas == load.final_replicas
+        assert ctl.per_hw[hw].utilization == pytest.approx(
+            load.utilization, rel=1e-12)

@@ -118,7 +118,7 @@ def test_group_calls_dedups_and_accumulates_weights():
     assert len(gemm.workloads) == 2  # two unique shapes
     assert dict(zip([w["M"] for w in gemm.workloads], gemm.weights)) == {256: 2.0, 8: 7.0}
     assert fams["rmsnorm"].weights == [5.0]
-    assert comms == {("all_reduce", 1e6, 4): 2.0}
+    assert comms == {("all_reduce", 1e6, 4, 0.0): 2.0}
 
 
 # ----------------------------------------------------------------------

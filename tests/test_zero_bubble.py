@@ -1,0 +1,228 @@
+"""Zero-bubble schedules + overlap-aware estimates (ISSUE 10).
+
+Three proof surfaces, all analytical (the executed ``shard_map`` ZB-H1
+forward and its tick-minimality run in ``tests/test_dist.py`` on forced
+multi-device subprocesses):
+
+  * ZB-H1 closed form == event simulation over the whole (S, M, V) grid,
+    and the bubble ordering theorem ``zb-h1 <= 1f1b <= gpipe`` with
+    strictness exactly where the theory says (``(M-1) mod S != 0``);
+  * ``Estimate.overlapped()`` is bounded between pure compute and the
+    additive estimate for every window, and the exposed-compute window
+    model behaves (0 with no launches, kernel/2 for one, monotone,
+    always < kernel);
+  * overlap-priced ``request_estimate`` stays inside
+    ``[compute-only, additive]`` end to end through the predict stack.
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch
+from repro.core.e2e import pp_boundary_hops, pp_bubble, request_estimate
+from repro.core.features import overlap_window_s
+from repro.core.hardware import get_hw
+from repro.dist.pipeline import (
+    SCHEDULES,
+    bubble_fraction,
+    schedule_ticks,
+    simulate_schedule,
+)
+from repro.predict import get_predictor
+from repro.predict.api import Estimate
+
+HW = get_hw("tpu-v5e")
+
+
+# ----------------------------------------------------------------------
+# ZB-H1 analytics: closed form == event machine, ordering theorem
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=80, deadline=None)
+@given(S=st.integers(1, 8), M=st.integers(1, 32), V=st.integers(1, 4))
+def test_zb_h1_closed_form_matches_ring_simulation(S, M, V):
+    """The three-phase closed form equals the event-driven ring machine,
+    tick for tick, over the whole (S, M, V) grid — the same machine that
+    validates 1F1B, with a 3x slot lifecycle."""
+    assert simulate_schedule(S, M, "zb-h1", V) == schedule_ticks(S, M, "zb-h1", V)
+
+
+def test_all_schedules_closed_form_exhaustive_grid():
+    """Exhaustive (not sampled) sweep: every schedule's closed form equals
+    the simulator on a dense grid, so the property tests cannot have
+    missed a resonance between S, M and V."""
+    for S in range(1, 7):
+        for M in range(1, 19):
+            assert simulate_schedule(S, M, "gpipe") == schedule_ticks(S, M, "gpipe")
+            for V in (1, 2, 3):
+                for sched in ("1f1b", "zb-h1"):
+                    assert simulate_schedule(S, M, sched, V) == schedule_ticks(
+                        S, M, sched, V
+                    ), (S, M, V, sched)
+
+
+@settings(max_examples=80, deadline=None)
+@given(S=st.integers(1, 8), M=st.integers(1, 32), V=st.integers(1, 4))
+def test_bubble_ordering_zb_leq_1f1b_leq_gpipe(S, M, V):
+    """The ordering theorem: at the same interleave, the ZB-H1 bubble is
+    <= 1F1B's, which (at V >= 2... or V=1 where it equals GPipe) is <=
+    GPipe's. Strictness for zb-vs-1f1b holds exactly when
+    ``(M - 1) mod S != 0`` — the lone-straggler tie region."""
+    b_gp = bubble_fraction(S, M, "gpipe")
+    b_il = bubble_fraction(S, M, "1f1b", V)
+    b_zb = bubble_fraction(S, M, "zb-h1", V)
+    assert b_zb <= b_il + 1e-12
+    assert b_il <= b_gp + 1e-12
+    r = (M - 1) % S
+    if r != 0:
+        assert b_zb < b_il
+    else:
+        assert b_zb == pytest.approx(b_il)
+
+
+def test_zb_h1_canonical_pins():
+    # canonical ZB-H1 makespan at V=1, S | M: 3M + S - 1 ticks
+    assert schedule_ticks(4, 8, "zb-h1", 1) == 27
+    assert schedule_ticks(8, 16, "zb-h1", 1) == 55
+    # the bench gate point (S=4, M=8, V=2): 3*2*4*2 + 3 = 51 ticks over
+    # 3*2*8 = 48 work units
+    assert schedule_ticks(4, 8, "zb-h1", 2) == 51
+    assert bubble_fraction(4, 8, "zb-h1", 2) == pytest.approx(3 / 51)
+    assert bubble_fraction(4, 8, "1f1b", 2) == pytest.approx(3 / 19)
+    # S=1 is bubble-free for every ring schedule
+    for V in (1, 2, 4):
+        assert bubble_fraction(1, 8, "zb-h1", V) == 0.0
+    # degenerate single microbatch: pure fill/drain
+    assert schedule_ticks(4, 1, "zb-h1", 2) == 3 * 2 * 4
+    # unknown schedules still raise (zb-h1 itself no longer does)
+    with pytest.raises(ValueError, match="schedule"):
+        schedule_ticks(4, 4, "zb-h2")
+    assert "zb-h1" in SCHEDULES
+
+
+def test_pp_layer_surcharge_and_hops_cover_zb_h1():
+    # surcharge: 51 ticks / 48 work units at the gate point
+    assert pp_bubble(4, 8, "zb-h1", 2) == pytest.approx(51 / 48)
+    # the split backward re-crosses every chunk boundary: 2*pp*V - 1 hops
+    assert pp_boundary_hops(4, "zb-h1", 2) == 15
+    assert pp_boundary_hops(4, "1f1b", 2) == 7
+    assert pp_boundary_hops(4, "gpipe", 2) == 3
+    assert pp_boundary_hops(1, "zb-h1", 2) == 0
+    # zb-h1's bubble surcharge never exceeds 1f1b's on a production sweep
+    for pp in (2, 3, 4, 8):
+        for M in (pp, 2 * pp, 3 * pp + 1):
+            for V in (1, 2, 4):
+                assert (
+                    pp_bubble(pp, M, "zb-h1", V)
+                    <= pp_bubble(pp, M, "1f1b", V) + 1e-12
+                )
+
+
+# ----------------------------------------------------------------------
+# overlap window model + Estimate.overlapped() bounds
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    kernel_ms=st.floats(0.0, 100.0),
+    n=st.integers(0, 10_000),
+)
+def test_overlap_window_model_properties(kernel_ms, n):
+    k = kernel_ms * 1e-3
+    w = overlap_window_s(k, n)
+    assert 0.0 <= w < max(k, 1e-300) or (k == 0.0 and w == 0.0)
+    if n == 0 or k == 0.0:
+        assert w == 0.0
+    if n == 1:
+        assert w == pytest.approx(k / 2)
+    # monotone in launch count: denser launches hide more
+    assert overlap_window_s(k, n + 1) >= w
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    kernel_ms=st.floats(0.0, 50.0),
+    comm_ms=st.floats(0.0, 50.0),
+    window_ms=st.floats(0.0, 200.0),
+)
+def test_overlapped_estimate_bounded(kernel_ms, comm_ms, window_ms):
+    """kernel_s <= overlapped total <= additive total, for *any* window —
+    oversized windows clamp to kernel_s, so comm exposure never goes
+    negative and compute is never hidden under itself."""
+    k, c, w = kernel_ms * 1e-3, comm_ms * 1e-3, window_ms * 1e-3
+    est = Estimate(
+        total_s=k + c, kernel_s=k, comm_s=c, theoretical_s=None,
+        by_family={"gemm": k}, by_comm_op={"all_reduce": c},
+        n_kernel_calls=1, n_comm_calls=1, fallbacks={},
+        overlap_window_s=overlap_window_s(k, 3),
+    )
+    for ov in (est.overlapped(), est.overlapped(window_s=w)):
+        assert est.kernel_s - 1e-15 <= ov.total_s <= est.total_s + 1e-15
+        assert ov.kernel_s == est.kernel_s
+        assert ov.comm_s >= 0.0
+        assert sum(ov.by_comm_op.values()) == pytest.approx(
+            ov.comm_s, rel=1e-9, abs=1e-15
+        )
+        assert ov.overlap_window_s <= est.kernel_s + 1e-15
+    # window=0 is the additive estimate exactly
+    assert est.overlapped(window_s=0.0).total_s == pytest.approx(est.total_s)
+
+
+def test_overlapped_none_window_falls_back_to_additive():
+    est = Estimate(
+        total_s=3.0, kernel_s=1.0, comm_s=2.0, theoretical_s=None,
+        by_family={}, by_comm_op={"p2p": 2.0},
+        n_kernel_calls=0, n_comm_calls=2, fallbacks={},
+        overlap_window_s=None,
+    )
+    ov = est.overlapped()
+    assert ov.total_s == est.total_s and ov.comm_s == est.comm_s
+
+
+def test_scaled_carries_overlap_window():
+    est = Estimate(
+        total_s=3.0, kernel_s=1.0, comm_s=2.0, theoretical_s=None,
+        by_family={}, by_comm_op={}, n_kernel_calls=0, n_comm_calls=0,
+        fallbacks={}, overlap_window_s=0.5,
+    )
+    assert est.scaled(2.0).overlap_window_s == pytest.approx(1.0)
+
+
+# ----------------------------------------------------------------------
+# overlap-priced request_estimate: regression bounds through the stack
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,tp,pp", [
+    ("qwen3-0.6b", 2, 1),
+    ("dbrx-132b", 4, 1),
+    ("qwen3-0.6b", 2, 4),
+])
+def test_request_estimate_overlap_bounded(arch, tp, pp):
+    """comm_overlap=True lands in [compute-only, additive] on every
+    request shape, including MoE EP traffic and pipelined requests where
+    the bubble surcharge scales both bounds identically."""
+    cfg = get_arch(arch).smoke()
+    oracle = get_predictor("oracle", HW)
+    kw = dict(tp=tp, pp=pp, pp_schedule="zb-h1" if pp > 1 else "gpipe",
+              predictor=oracle)
+    add = request_estimate(cfg, 2, 64, 8, **kw)
+    ovl = request_estimate(cfg, 2, 64, 8, comm_overlap=True, **kw)
+    assert add.kernel_s - 1e-15 <= ovl.total_s <= add.total_s + 1e-15
+    assert ovl.kernel_s == pytest.approx(add.kernel_s)
+    assert ovl.comm_s <= add.comm_s + 1e-15
+
+
+def test_request_estimate_zb_h1_cheapest_schedule():
+    cfg = get_arch("qwen3-0.6b").smoke()
+    oracle = get_predictor("oracle", HW)
+    totals = {
+        sched: request_estimate(cfg, 2, 64, 8, tp=1, pp=4,
+                                pp_schedule=sched, predictor=oracle).total_s
+        for sched in SCHEDULES
+    }
+    # zb-h1 pays more boundary p2p traffic but the bubble shrink dominates
+    assert totals["zb-h1"] < totals["gpipe"]
+    assert pp_bubble(4, None, "zb-h1") < pp_bubble(4, None, "1f1b")
